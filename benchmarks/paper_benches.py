@@ -1,0 +1,256 @@
+"""Benchmarks mirroring the paper's tables/figures (see DESIGN.md §6).
+
+Each function returns a list of (name, us_per_call, derived) rows; run.py
+prints them as CSV. Everything runs on host CPU at reduced scale — the
+point is the *system* behaviour (ratios, shares, savings), not absolute
+wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, n=5, warmup=2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+# --- Fig 11: NQE switching throughput vs batch size -------------------------
+
+
+def bench_nqe_switch() -> List[Row]:
+    from repro.core import CoreEngine, CommOp
+    eng = CoreEngine()
+    eng.add_rule("large", lambda op: op.size_bytes > 1 << 20, "hierarchical")
+    op = CommOp(verb="psum", axes=("pod",), size_bytes=1 << 22)
+    rows = []
+    for batch in (1, 4, 8, 64, 256):
+        ops = [op] * batch
+        us = _timeit(lambda: eng.route_batch(ops), n=20)
+        rows.append((f"nqe_switch_batch{batch}", us,
+                     f"{batch / us * 1e6:.0f} NQEs/s"))
+    return rows
+
+
+# --- Fig 12: bulk-data path throughput vs message size ----------------------
+
+
+def bench_memcopy() -> List[Row]:
+    rows = []
+    for size_kb in (4, 64, 1024, 8192):
+        n = size_kb * 1024 // 4
+        x = jnp.arange(n, dtype=jnp.float32)
+        cp = jax.jit(lambda a: a * 1.0)
+        jax.block_until_ready(cp(x))
+        us = _timeit(lambda: jax.block_until_ready(cp(x)), n=10)
+        gbps = size_kb / 1024 / 1024 / (us / 1e6) * 8
+        rows.append((f"memcopy_{size_kb}KB", us, f"{gbps:.2f} Gbit/s host"))
+    return rows
+
+
+# --- Fig 8 / Table 2: multiplexing savings ----------------------------------
+
+
+def bench_multiplexing() -> List[Row]:
+    from repro.serve import bursty_trace, chip_accounting
+    rows = []
+    for tenants in (3, 16, 64):
+        t0 = time.perf_counter()
+        acc = chip_accounting(bursty_trace(tenants, seed=1), cap_per_chip=50.0)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"multiplex_{tenants}tenants", us,
+                     f"savings={acc['savings_frac']:.0%} "
+                     f"({acc['dedicated_chips']}->{acc['shared_chips']} chips)"))
+    return rows
+
+
+# --- Fig 9: entity-level fair sharing ----------------------------------------
+
+
+def bench_fairshare() -> List[Row]:
+    from repro.configs import RunConfig, get_smoke_config
+    from repro.launch.mesh import make_single_device_mesh
+    from repro.serve import Request, ServeEngine, TenantScheduler
+    cfg = get_smoke_config("internlm2-1.8b")
+    rcfg = RunConfig(attn_q_block=16, attn_kv_block=16)
+    rows = []
+    for selfish in (8, 32):
+        sched = TenantScheduler(policy="wfq")
+        sched.add_tenant(0)
+        sched.add_tenant(1)
+        eng = ServeEngine(cfg, rcfg, make_single_device_mesh(),
+                          batch_slots=2, max_seq=64, scheduler=sched)
+        for _ in range(6):
+            eng.submit(Request(0, [1, 2], 10))
+        for _ in range(selfish):
+            eng.submit(Request(1, [3, 4], 10))
+        t0 = time.perf_counter()
+        for _ in range(30):
+            eng.step()
+            if sched.pending(0) == 0:
+                break
+        us = (time.perf_counter() - t0) * 1e6
+        s = sched.shares()
+        rows.append((f"fairshare_vs_{selfish}flows", us,
+                     f"shares {s.get(0, 0):.2f}/{s.get(1, 0):.2f}"))
+    return rows
+
+
+# --- Fig 21: isolation (rate caps + work conservation) -----------------------
+
+
+def bench_isolation() -> List[Row]:
+    from repro.core import TokenBucket
+    caps = {"vm1": TokenBucket(1000, 1000), "vm2": TokenBucket(500, 500)}
+    capacity = 10000.0
+    got = {"vm1": 0.0, "vm2": 0.0, "vm3": 0.0}
+    t0 = time.perf_counter()
+    for step in range(100):
+        now = step * 0.01
+        left = capacity * 0.01
+        for vm in ("vm1", "vm2"):
+            want = left
+            take = 0.0
+            b = caps[vm]
+            b._refill(now)
+            take = min(want, b.tokens)
+            if take > 0:
+                b.consume(take, now)
+            got[vm] += take
+            left -= take
+        got["vm3"] += left        # uncapped tenant is work-conserving
+    us = (time.perf_counter() - t0) * 1e6
+    return [("isolation_caps", us,
+             f"vm1={got['vm1']:.0f}(cap1000) vm2={got['vm2']:.0f}(cap500) "
+             f"vm3={got['vm3']:.0f}(rest)")]
+
+
+# --- Table 3 / Fig 10: stack swap without API change -------------------------
+
+
+def bench_stack_swap() -> List[Row]:
+    """Same attention call, three stacks: naive -> blockwise -> pallas."""
+    from repro.kernels import ops
+    b, h, s, d = 1, 8, 512, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d), jnp.float32)
+    rows = []
+    base = None
+    for impl in ("ref", "pallas"):
+        f = lambda: jax.block_until_ready(
+            ops.mha_forward(q, k, v, impl=impl, q_block=128, kv_block=128))
+        us = _timeit(f, n=3)
+        if base is None:
+            base = us
+        rows.append((f"stack_swap_attn_{impl}", us, f"{base / us:.2f}x vs ref"))
+    # Fig 10: shm elision vs full reduction (trace-level)
+    from repro.core import CommOp, get_nsm
+    import numpy as _np
+    x = jnp.ones((1 << 16,), jnp.float32)
+    op = CommOp(verb="psum", axes=("model",), op_data=1)
+    shm = get_nsm("shm")
+    f_id = jax.jit(lambda a: a * 1.0)
+    jax.block_until_ready(f_id(x))
+    us_shm = _timeit(lambda: jax.block_until_ready(f_id(x)), n=10)
+    rows.append(("shm_fastpath_move", us_shm, "elided collective (identity)"))
+    return rows
+
+
+# --- Table 5: latency distribution -------------------------------------------
+
+
+def bench_latency() -> List[Row]:
+    from repro.configs import RunConfig, get_smoke_config
+    from repro.launch.mesh import make_single_device_mesh
+    from repro.serve import Request, ServeEngine
+    cfg = get_smoke_config("internlm2-1.8b")
+    rcfg = RunConfig(attn_q_block=16, attn_kv_block=16)
+    eng = ServeEngine(cfg, rcfg, make_single_device_mesh(), batch_slots=4,
+                      max_seq=64)
+    t0 = time.perf_counter()
+    starts = {}
+    for i in range(12):
+        r = Request(0, [1, 2, 3], 8, req_id=i)
+        starts[i] = time.perf_counter()
+        eng.submit(r)
+    eng.run_until_drained()
+    lats = [(r.finish_time - starts[r.req_id]) * 1e3 for r in eng.completed]
+    us = (time.perf_counter() - t0) * 1e6
+    lats = sorted(lats)
+    return [("serve_latency", us,
+             f"min={lats[0]:.0f}ms median={lats[len(lats)//2]:.0f}ms "
+             f"max={lats[-1]:.0f}ms n={len(lats)}")]
+
+
+# --- Tables 6/7: overhead of the NetKernel layer ------------------------------
+
+
+def bench_overhead() -> List[Row]:
+    """nk_psum routed through CoreEngine vs raw lax.psum: identical compiled
+    artifact (trace-time-only indirection) + dispatch overhead."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core import make_engine, nk_psum, use_engine
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    eng = make_engine(mesh, "xla")
+    x = jnp.ones((256, 256), jnp.float32)
+
+    def routed(v):
+        with use_engine(eng):
+            return nk_psum(v, "model")
+    f1 = jax.jit(shard_map(routed, mesh=mesh, in_specs=P(), out_specs=P()))
+    f2 = jax.jit(shard_map(lambda v: jax.lax.psum(v, "model"), mesh=mesh,
+                           in_specs=P(), out_specs=P()))
+    same = f1.lower(x).compile().as_text() == f2.lower(x).compile().as_text()
+    us1 = _timeit(lambda: jax.block_until_ready(f1(x)), n=20)
+    us2 = _timeit(lambda: jax.block_until_ready(f2(x)), n=20)
+    return [("netkernel_overhead", us1,
+             f"raw={us2:.1f}us identical_hlo={same} "
+             f"ratio={us1 / max(us2, 1e-9):.3f}")]
+
+
+# --- Figs 18-20 / Table 4: scalability ---------------------------------------
+
+
+def bench_scalability() -> List[Row]:
+    """Collective throughput scaling with device count (host devices)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    rows = []
+    n_dev = len(jax.devices())
+    size = 1 << 20
+    for d in (1, 2, 4, 8):
+        if d > n_dev:
+            break
+        mesh = make_host_mesh(1, d)
+        x = jnp.ones((d, size // d), jnp.float32)
+        f = jax.jit(shard_map(lambda v: jax.lax.psum(v, "model"), mesh=mesh,
+                              in_specs=P("model", None),
+                              out_specs=P("model", None)))
+        jax.block_until_ready(f(x))
+        us = _timeit(lambda: jax.block_until_ready(f(x)), n=10)
+        gbps = size * 4 / (us / 1e6) / 1e9
+        rows.append((f"psum_scaling_{d}dev", us, f"{gbps:.2f} GB/s"))
+    return rows
+
+
+ALL = [
+    bench_nqe_switch, bench_memcopy, bench_multiplexing, bench_fairshare,
+    bench_isolation, bench_stack_swap, bench_latency, bench_overhead,
+    bench_scalability,
+]

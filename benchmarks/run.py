@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+# 8 host devices so the scalability bench can sweep 1..8 (NOT 512 — that is
+# dry-run-only; see src/repro/launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks.paper_benches import ALL
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{bench.__name__},-1,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,54 @@
+"""Multi-tenant serving: multiplexing, fairness, isolation — use cases 1+2.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+
+Three tenants share one engine (the paper's "one NSM serves many VMs"):
+  tenant 0: normal load
+  tenant 1: selfish (8x the requests)        -> WFQ keeps shares equal
+  tenant 2: rate-capped by token bucket      -> hard isolation
+Then the fleet-level economics: chips for dedicated-per-tenant peaks vs one
+shared engine on bursty traces (the >40% saving of Table 2).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+from repro.configs import RunConfig, get_smoke_config
+from repro.launch.mesh import make_single_device_mesh
+from repro.serve import (
+    Request, ServeEngine, TenantScheduler, bursty_trace, chip_accounting,
+)
+
+cfg = get_smoke_config("internlm2-1.8b")
+rcfg = RunConfig(attn_q_block=16, attn_kv_block=16)
+
+sched = TenantScheduler(policy="wfq")
+sched.add_tenant(0, weight=1.0)
+sched.add_tenant(1, weight=1.0)
+sched.add_tenant(2, weight=1.0, rate_tokens_per_s=2.0, burst=16.0)
+
+eng = ServeEngine(cfg, rcfg, make_single_device_mesh(), batch_slots=4,
+                  max_seq=64, scheduler=sched)
+
+for i in range(4):
+    eng.submit(Request(tenant_id=0, prompt=[1, 2, 3], max_new_tokens=12))
+for i in range(32):
+    eng.submit(Request(tenant_id=1, prompt=[7, 8], max_new_tokens=12))
+for i in range(6):
+    eng.submit(Request(tenant_id=2, prompt=[11], max_new_tokens=12))
+
+# run under contention and report shares while everyone is backlogged
+for step in range(30):
+    eng.step(now=step * 0.05)
+print("shares under contention (tenant 1 is 8x selfish):",
+      {k: round(v, 2) for k, v in sched.shares().items()})
+
+out = eng.run_until_drained()
+done = {t: sum(1 for r in eng.completed if r.tenant_id == t)
+        for t in (0, 1, 2)}
+print(f"completed per tenant: {done} "
+      f"(tenant 2 capped at 2 tok/s: only {done[2]} of 6 admitted)")
+
+acc = chip_accounting(bursty_trace(16, seed=0), cap_per_chip=50.0)
+print(f"fleet economics (16 bursty tenants): dedicated "
+      f"{acc['dedicated_chips']} chips vs shared {acc['shared_chips']} "
+      f"-> {acc['savings_frac']:.0%} saved (paper claims >40%)")

@@ -1,0 +1,61 @@
+"""Use case 3: deploy a different stack beneath unmodified code.
+
+    PYTHONPATH=src python examples/stack_swap.py
+
+The paper deploys mTCP under unmodified nginx. Here:
+  (a) the same attention call runs on the naive / blockwise / Pallas stacks,
+  (b) the same training step runs with its cross-pod gradient transport on
+      xla / hierarchical / compressed(int8) stacks,
+and in both cases the "application" (model / loss) is byte-identical — only
+the operator's routing table changes.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, ShapeConfig, get_smoke_config
+from repro.core import make_engine
+from repro.data import for_model
+from repro.kernels import ops
+from repro.launch.mesh import make_host_mesh
+from repro.train import Runner
+
+# --- (a) attention stacks ---------------------------------------------------
+b, h, s, d = 1, 8, 512, 64
+q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d), jnp.float32)
+k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, d), jnp.float32)
+v = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d), jnp.float32)
+for impl in ("ref", "pallas"):
+    f = lambda: jax.block_until_ready(
+        ops.mha_forward(q, k, v, impl=impl, q_block=128, kv_block=128))
+    f()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f()
+    dt = (time.perf_counter() - t0) / 3
+    print(f"[attention stack={impl:7s}] {dt * 1e3:7.1f} ms/call "
+          f"(same call site, swapped implementation)")
+
+# --- (b) gradient-transport stacks ------------------------------------------
+cfg = get_smoke_config("granite-8b")
+shape = ShapeConfig("tiny", 32, 8, "train")
+mesh = make_host_mesh(2, 2, pod=2)
+for policy in ("xla", "hierarchical", "compressed"):
+    rcfg = RunConfig(attn_q_block=16, attn_kv_block=16, learning_rate=1e-2,
+                     warmup_steps=2, total_steps=20,
+                     explicit_pod_sync=(policy != "xla"), nsm_policy=policy)
+    engine = make_engine(mesh, policy)
+    with tempfile.TemporaryDirectory() as dd:
+        r = Runner(cfg, rcfg, mesh, for_model(cfg, shape), dd, engine=engine)
+        r.init_state(jax.random.PRNGKey(0))
+        r.run(5)
+        losses = [m["ce_loss"] for m in r.metrics_log]
+        wire = engine.total_bytes()
+        print(f"[grad stack={policy:12s}] loss {losses[0]:.3f}->{losses[-1]:.3f}"
+              f"  routed-bytes={wire / 1e6:.1f} MB "
+              f"({'int8 wire' if policy == 'compressed' else 'bf16/f32 wire'})")
+print("stack_swap OK — zero model-code changes across all six stacks")

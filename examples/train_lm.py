@@ -1,0 +1,83 @@
+"""End-to-end training driver: train a small LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 20m --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Demonstrates the full substrate on CPU: deterministic data pipeline,
+AdamW + cosine schedule, per-layer remat, async checkpoints, straggler
+watchdog, and (with --pods 2) the NetKernel compressed cross-pod stack.
+The loss on the synthetic copy-structured corpus drops well below the
+unigram entropy — the model learns the copy rule.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+
+from repro.configs import RunConfig, ShapeConfig, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import make_engine
+from repro.data import for_model
+from repro.launch.mesh import make_host_mesh
+from repro.train import Runner
+
+PRESETS = {
+    # ~20M params: fast on CPU
+    "20m": dict(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+                d_ff=1024, vocab_size=8192, head_dim=32),
+    # ~100M params: the "train a ~100M model" example (slower)
+    "100m": dict(num_layers=8, d_model=640, num_heads=10, num_kv_heads=5,
+                 d_ff=2560, vocab_size=32000, head_dim=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="20m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--pods", type=int, default=0)
+    ap.add_argument("--nsm", default="xla",
+                    choices=["xla", "compressed", "hierarchical"])
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-3b"),
+                              name=f"lm-{args.preset}", **PRESETS[args.preset])
+    n = cfg.num_params()
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    mesh = (make_host_mesh(2, 2, pod=args.pods) if args.pods
+            else make_host_mesh(2, 4))
+    rcfg = RunConfig(attn_q_block=64, attn_kv_block=64,
+                     learning_rate=3e-3, warmup_steps=20,
+                     total_steps=args.steps, checkpoint_every=50,
+                     explicit_pod_sync=bool(args.pods) and args.nsm != "xla",
+                     nsm_policy=args.nsm)
+    engine = make_engine(mesh, args.nsm) if args.nsm != "xla" else None
+    print(f"model {cfg.name}: {n/1e6:.1f}M params on mesh "
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, NSM={args.nsm}")
+
+    with tempfile.TemporaryDirectory() as d:
+        r = Runner(cfg, rcfg, mesh, for_model(cfg, shape), d, engine=engine)
+        r.init_state(jax.random.PRNGKey(0))
+        t0 = time.time()
+        out = r.run(args.steps)
+        dt = time.time() - t0
+        losses = [m["ce_loss"] for m in r.metrics_log]
+        print(f"steps={out['final_step']} wall={dt:.1f}s "
+              f"({dt / args.steps * 1e3:.0f} ms/step)")
+        for i in range(0, len(losses), max(1, len(losses) // 10)):
+            print(f"  step {i:4d}  ce_loss {losses[i]:.4f}")
+        print(f"  final ce_loss {losses[-1]:.4f} "
+              f"(started {losses[0]:.4f})")
+        assert losses[-1] < losses[0]
+    if engine is not None:
+        print("CoreEngine ledger:", engine.ledger_table()[:2])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""The ``nk_*`` API — the BSD-socket boundary of NetKernel-JAX.
+
+Model and training code calls these functions (inside ``shard_map`` bodies)
+and never names a collective implementation. A CoreEngine — owned by the
+operator, configured per tenant — resolves each call to an NSM at trace
+time, exactly as GuestLib redirects ``send()`` to whichever NSM the operator
+attached. Swapping stacks (use case 3) is a config change; model code is
+untouched.
+
+When no engine is installed the native stack is used, so the API degrades to
+plain ``jax.lax`` semantics.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+from repro.core.engine import CoreEngine
+from repro.core.nsm import get_nsm
+from repro.core.nqe import FLAG_GRADIENT, FLAG_SERVING
+
+_state = threading.local()
+
+
+def _current() -> Optional[CoreEngine]:
+    return getattr(_state, "engine", None)
+
+
+@contextlib.contextmanager
+def use_engine(engine: CoreEngine):
+    """Install a CoreEngine for nk_* calls traced within this context."""
+    prev = _current()
+    _state.engine = engine
+    try:
+        yield engine
+    finally:
+        _state.engine = prev
+
+
+def current_engine() -> Optional[CoreEngine]:
+    return _current()
+
+
+def _axes_tuple(axes) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _dispatch(verb, x, axes, *, tenant_id=0, flags=0, op_data=0, **kw):
+    axes = _axes_tuple(axes)
+    eng = _current()
+    if eng is None:
+        import jax
+        nsm = get_nsm("xla")
+        sizes = {a: 0 for a in axes}   # XlaNsm never reads sizes
+        fn = getattr(nsm, verb)
+        return fn(x, axes, axis_sizes=sizes, **kw)
+    return eng.dispatch(verb, x, axes, tenant_id=tenant_id, flags=flags,
+                        op_data=op_data, **kw)
+
+
+def nk_psum(x, axes, *, tenant_id=0, gradient=False, serving=False, op_data=0):
+    flags = (FLAG_GRADIENT if gradient else 0) | (FLAG_SERVING if serving else 0)
+    return _dispatch("psum", x, axes, tenant_id=tenant_id, flags=flags,
+                     op_data=op_data)
+
+
+def nk_all_gather(x, axes, *, axis=0, tiled=True, tenant_id=0, op_data=0):
+    return _dispatch("all_gather", x, axes, tenant_id=tenant_id,
+                     op_data=op_data, axis=axis, tiled=tiled)
+
+
+def nk_reduce_scatter(x, axes, *, axis=0, tenant_id=0, gradient=False):
+    flags = FLAG_GRADIENT if gradient else 0
+    return _dispatch("reduce_scatter", x, axes, tenant_id=tenant_id,
+                     flags=flags, axis=axis)
+
+
+def nk_all_to_all(x, axes, *, split_axis, concat_axis, tenant_id=0):
+    return _dispatch("all_to_all", x, axes, tenant_id=tenant_id,
+                     split_axis=split_axis, concat_axis=concat_axis)
+
+
+def nk_ppermute(x, axes, *, perm, tenant_id=0):
+    return _dispatch("ppermute", x, axes, tenant_id=tenant_id, perm=perm)
+
+
+def nk_grad_sync(grads, axes, *, tenant_id=0):
+    """Synchronize a gradient pytree over ``axes`` through the engine.
+
+    This is the NetKernel-owned "last mile" of training traffic: every leaf
+    is a gradient-flagged psum the routing table may send to the compressed /
+    hierarchical / ring stack.
+    """
+    import jax
+    return jax.tree.map(
+        lambda g: nk_psum(g, axes, tenant_id=tenant_id, gradient=True), grads)

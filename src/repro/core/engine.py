@@ -1,0 +1,195 @@
+"""CoreEngine: the NQE switch — routing, accounting, isolation.
+
+The paper's CoreEngine is a software switch on the hypervisor: it maps each
+NQE to the right NSM via a connection table, polls queues round-robin for
+basic fairness, and can rate-limit a VM in bytes/s or NQEs/s. Here:
+
+  * routing table   : ordered policy rules ``predicate(CommOp) -> nsm name``;
+                      the operator swaps a tenant's whole comm stack by
+                      editing rules, never model code (use case 3).
+  * ledger          : per-(tenant, verb, axes) op/byte accounting recorded at
+                      trace time — the control-plane view of every intent the
+                      models issue. The dry-run cross-checks this against the
+                      collectives found in compiled HLO.
+  * token buckets   : per-tenant rate limiting used by the serving scheduler
+                      (paper Fig. 21); round-robin polling lives in
+                      repro.serve.scheduler.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.nqe import CommOp, describe, payload_bytes
+from repro.core.nsm import Nsm, get_nsm
+
+Rule = Tuple[str, Callable[[CommOp], bool], str]   # (name, predicate, nsm)
+
+
+@dataclass
+class LedgerEntry:
+    ops: int = 0
+    bytes: int = 0
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s, burst up to ``capacity``.
+
+    Tokens are bytes (or request units). ``consume`` returns True if admitted;
+    ``wait_time`` reports how long until ``n`` tokens would be available —
+    the scheduler uses it for work-conserving backfill.
+    """
+
+    def __init__(self, rate: float, capacity: float):
+        self.rate = float(rate)
+        self.capacity = float(capacity)
+        self.tokens = float(capacity)
+        self.updated = 0.0
+
+    def _refill(self, now: float):
+        if now > self.updated:
+            self.tokens = min(self.capacity,
+                              self.tokens + (now - self.updated) * self.rate)
+            self.updated = now
+
+    def consume(self, n: float, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        self._refill(now)
+        if self.tokens >= n:
+            self.tokens -= n
+            return True
+        return False
+
+    def wait_time(self, n: float, now: Optional[float] = None) -> float:
+        now = time.monotonic() if now is None else now
+        self._refill(now)
+        if self.tokens >= n:
+            return 0.0
+        return (n - self.tokens) / self.rate
+
+
+class CoreEngine:
+    """Routes CommOps to NSMs; accounts and isolates tenants."""
+
+    def __init__(self, mesh=None, default_nsm: str = "xla"):
+        self.mesh = mesh
+        self.default_nsm = default_nsm
+        self.rules: List[Rule] = []
+        self.ledger: Dict[Tuple[int, str, Tuple[str, ...]], LedgerEntry] = \
+            defaultdict(LedgerEntry)
+        self.route_log: List[Tuple[bytes, str]] = []
+        self.buckets: Dict[int, TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    # --- connection-table management ------------------------------------
+    def add_rule(self, name: str, predicate: Callable[[CommOp], bool],
+                 nsm: str) -> None:
+        get_nsm(nsm)  # validate eagerly
+        self.rules.append((name, predicate, nsm))
+
+    def clear_rules(self) -> None:
+        self.rules.clear()
+
+    def set_tenant_rate(self, tenant_id: int, bytes_per_s: float,
+                        burst: Optional[float] = None) -> None:
+        self.buckets[tenant_id] = TokenBucket(
+            bytes_per_s, burst if burst is not None else bytes_per_s)
+
+    # --- routing ---------------------------------------------------------
+    def route(self, op: CommOp) -> Nsm:
+        choice = self.default_nsm
+        for name, pred, nsm in self.rules:
+            if pred(op):
+                choice = nsm
+                break
+        with self._lock:
+            e = self.ledger[(op.tenant_id, op.verb, op.axes)]
+            e.ops += 1
+            e.bytes += op.size_bytes
+            self.route_log.append((op.pack(), choice))
+        return get_nsm(choice)
+
+    def route_batch(self, ops: List[CommOp]) -> List[Nsm]:
+        """Batched routing (paper Fig. 11: batching the NQE switch)."""
+        return [self.route(op) for op in ops]
+
+    # --- execution helper -------------------------------------------------
+    def axis_sizes(self) -> Dict[str, int]:
+        if self.mesh is None:
+            raise ValueError("CoreEngine needs a mesh to execute collectives")
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def dispatch(self, verb: str, x, axes: Tuple[str, ...], *, tenant_id=0,
+                 tag=0, flags=0, op_data=0, **kw):
+        op = CommOp(verb=verb, axes=tuple(axes), tenant_id=tenant_id, tag=tag,
+                    flags=flags, op_data=op_data, size_bytes=payload_bytes(x),
+                    shape_desc=describe(x))
+        nsm = self.route(op)
+        fn = getattr(nsm, "psum" if verb == "psum" else verb, None)
+        if verb == "shm_move":
+            return x
+        if fn is None:
+            raise ValueError(f"NSM {nsm.name} cannot execute {verb}")
+        return fn(x, tuple(axes), axis_sizes=self.axis_sizes(), op=op, **kw)
+
+    # --- reporting ---------------------------------------------------------
+    def ledger_table(self) -> List[Tuple[int, str, Tuple[str, ...], int, int]]:
+        with self._lock:
+            return sorted(
+                (t, v, a, e.ops, e.bytes)
+                for (t, v, a), e in self.ledger.items())
+
+    def total_bytes(self, tenant_id: Optional[int] = None) -> int:
+        with self._lock:
+            return sum(e.bytes for (t, _, _), e in self.ledger.items()
+                       if tenant_id is None or t == tenant_id)
+
+    def reset_ledger(self) -> None:
+        with self._lock:
+            self.ledger.clear()
+            self.route_log.clear()
+
+
+# ---------------------------------------------------------------------------
+# Stock operator policies (what `RunConfig.nsm_policy` selects)
+# ---------------------------------------------------------------------------
+
+
+def make_engine(mesh, policy: str = "xla") -> CoreEngine:
+    """Build a CoreEngine with one of the stock routing policies.
+
+    xla           everything on the native stack (paper-faithful baseline:
+                  "the kernel stack NSM").
+    ring          large payloads on the explicit ring stack, small ops native
+                  (message-size-based stack selection).
+    hierarchical  multi-axis reductions 2-level; rest native.
+    compressed    gradient-flagged psums on slow axes int8; rest hierarchical.
+    shm-first     sharding-compatible moves elided, rest native.
+    """
+    eng = CoreEngine(mesh=mesh, default_nsm="xla")
+    if policy == "xla":
+        pass
+    elif policy == "ring":
+        eng.add_rule("large-to-ring",
+                     lambda op: op.size_bytes >= 1 << 20 and op.verb in
+                     ("psum", "all_gather", "reduce_scatter"), "ring2")
+    elif policy == "hierarchical":
+        eng.add_rule("multiaxis-psum",
+                     lambda op: op.verb == "psum" and len(op.axes) > 1,
+                     "hierarchical")
+    elif policy == "compressed":
+        eng.add_rule("grad-pod-psum",
+                     lambda op: op.verb == "psum" and bool(op.flags & 1)
+                     and "pod" in op.axes, "compressed")
+        eng.add_rule("multiaxis-psum",
+                     lambda op: op.verb == "psum" and len(op.axes) > 1,
+                     "hierarchical")
+    elif policy == "shm-first":
+        eng.add_rule("elide-compatible",
+                     lambda op: bool(op.op_data & 1), "shm")
+    else:
+        raise ValueError(f"unknown nsm policy {policy!r}")
+    return eng

@@ -1,0 +1,317 @@
+"""Network Stack Modules: pluggable collective implementations.
+
+The paper's NSMs are whole TCP/IP stacks (Linux kernel, mTCP, shared-memory)
+that serve unmodified applications behind the BSD socket API. Here an NSM is
+a whole *collective stack* that serves unmodified model code behind the
+``nk_*`` API (repro.core.collectives):
+
+  XlaNsm           "the kernel stack": native jax.lax collectives; XLA owns
+                   scheduling. Always correct, operator-default.
+  RingNsm          "the mTCP stack": explicit (bidirectional) ring
+                   reduce-scatter / all-gather built on lax.ppermute —
+                   schedules the wire explicitly so compute/comm overlap and
+                   per-step chunking are under framework control.
+  HierarchicalNsm  2-level multi-pod stack: reduce-scatter on the fast
+                   intra-pod axis, exchange only 1/axis_size of the bytes on
+                   the slow pod axis, all-gather back. Cross-pod bytes drop
+                   by the intra-pod axis size.
+  CompressedNsm    int8-on-the-wire transport for slow axes (gradient
+                   compression), composing with either inner stack.
+  ShmNsm           the colocated fast path: elides ops whose payload is
+                   already reduced/replicated (sharding-compatible), the
+                   analog of copying via shared memory instead of TCP.
+
+All methods execute inside ``shard_map`` bodies (manual-collective context).
+Mesh axis sizes are passed statically by the CoreEngine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compression
+from repro.core.nqe import CommOp
+
+
+class Nsm:
+    """Base collective stack. Subclasses implement the verbs they accelerate;
+    anything not overridden falls back to the native XLA lowering."""
+
+    name = "base"
+
+    # -- verbs ----------------------------------------------------------
+    def psum(self, x, axes: Tuple[str, ...], *, axis_sizes: Dict[str, int],
+             op: Optional[CommOp] = None):
+        return lax.psum(x, axes if len(axes) > 1 else axes[0])
+
+    def all_gather(self, x, axes, *, axis_sizes, axis: int = 0, tiled=True,
+                   op: Optional[CommOp] = None):
+        name = axes if len(axes) > 1 else axes[0]
+        return lax.all_gather(x, name, axis=axis, tiled=tiled)
+
+    def reduce_scatter(self, x, axes, *, axis_sizes, axis: int = 0,
+                       op: Optional[CommOp] = None):
+        name = axes if len(axes) > 1 else axes[0]
+        return lax.psum_scatter(x, name, scatter_dimension=axis, tiled=True)
+
+    def all_to_all(self, x, axes, *, axis_sizes, split_axis: int,
+                   concat_axis: int, op: Optional[CommOp] = None):
+        name = axes if len(axes) > 1 else axes[0]
+        return lax.all_to_all(x, name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+    def ppermute(self, x, axes, *, axis_sizes, perm, op: Optional[CommOp] = None):
+        return lax.ppermute(x, axes[0], perm)
+
+    def __repr__(self):
+        return f"<Nsm:{self.name}>"
+
+
+class XlaNsm(Nsm):
+    """Native stack — jax.lax collectives, XLA-scheduled ("kernel stack")."""
+
+    name = "xla"
+
+
+# ---------------------------------------------------------------------------
+# Ring stack
+# ---------------------------------------------------------------------------
+
+
+def _flatten_pad(x, n: int):
+    """Flatten to (n, chunk) with zero padding; returns (chunks, orig_size, shape)."""
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    chunk = -(-size // n)
+    pad = n * chunk - size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n, chunk), size, x.shape
+
+
+def _unflatten(chunks, size: int, shape):
+    return chunks.reshape(-1)[:size].reshape(shape)
+
+
+class RingNsm(Nsm):
+    """Explicit ring collectives over ``lax.ppermute`` ("the mTCP stack").
+
+    Ring reduce-scatter + ring all-gather with an optional bidirectional
+    split (two counter-rotating rings, halving the per-link bytes). On TPU,
+    each ppermute is an async ICI hop that XLA can overlap with the
+    surrounding compute, which is the point of owning the schedule.
+    """
+
+    name = "ring"
+
+    def __init__(self, bidirectional: bool = False):
+        self.bidirectional = bidirectional
+        if bidirectional:
+            self.name = "ring2"
+
+    # --- internals ------------------------------------------------------
+    def _ring_reduce_scatter(self, chunks, axis: str, n: int, reverse=False):
+        """chunks: (n, chunk). Returns this device's owned reduced chunk."""
+        idx = lax.axis_index(axis)
+        step = -1 if not reverse else 1
+        perm = [(i, (i + 1) % n) for i in range(n)] if not reverse else \
+               [(i, (i - 1) % n) for i in range(n)]
+        # Explicit unroll (n is a small static mesh-axis size): each hop is an
+        # async ICI ppermute XLA can overlap with the neighbouring adds.
+        # Device r accumulates the chunk it will own (index r) over n-1 hops.
+        acc = jnp.zeros_like(chunks[0])
+        for t in range(n - 1):
+            send_idx = (idx + step * (t + 1)) % n
+            piece = lax.dynamic_index_in_dim(chunks, send_idx, axis=0,
+                                             keepdims=False)
+            acc = lax.ppermute(acc + piece, axis, perm)
+        own = lax.dynamic_index_in_dim(chunks, idx, axis=0, keepdims=False)
+        return own + acc
+
+    def _ring_all_gather(self, piece, axis: str, n: int, reverse=False):
+        """piece: (chunk,) owned by this device. Returns (n, chunk)."""
+        idx = lax.axis_index(axis)
+        perm = [(i, (i + 1) % n) for i in range(n)] if not reverse else \
+               [(i, (i - 1) % n) for i in range(n)]
+        step = -1 if not reverse else 1
+        buf = jnp.zeros((n,) + piece.shape, piece.dtype)
+        buf = lax.dynamic_update_index_in_dim(buf, piece, idx, axis=0)
+        cur = piece
+        for t in range(n - 1):
+            cur = lax.ppermute(cur, axis, perm)
+            src = (idx + step * (t + 1)) % n
+            buf = lax.dynamic_update_index_in_dim(buf, cur, src, axis=0)
+        return buf
+
+    # --- verbs ----------------------------------------------------------
+    def psum(self, x, axes, *, axis_sizes, op=None):
+        out = x
+        for axis in axes:
+            out = self._psum_one(out, axis, axis_sizes[axis])
+        return out
+
+    def _psum_one(self, x, axis: str, n: int):
+        if n == 1:
+            return x
+        if not self.bidirectional:
+            chunks, size, shape = _flatten_pad(x, n)
+            piece = self._ring_reduce_scatter(chunks, axis, n)
+            full = self._ring_all_gather(piece, axis, n)
+            return _unflatten(full, size, shape)
+        # bidirectional: two half-payload counter-rotating rings
+        flat = x.reshape(-1)
+        half = flat.shape[0] // 2
+        a, b = flat[:half], flat[half:]
+        ca, sa, _ = _flatten_pad(a, n)
+        cb, sb, _ = _flatten_pad(b, n)
+        pa = self._ring_reduce_scatter(ca, axis, n, reverse=False)
+        pb = self._ring_reduce_scatter(cb, axis, n, reverse=True)
+        fa = self._ring_all_gather(pa, axis, n, reverse=False)
+        fb = self._ring_all_gather(pb, axis, n, reverse=True)
+        out = jnp.concatenate([fa.reshape(-1)[:sa], fb.reshape(-1)[:sb]])
+        return out.reshape(x.shape)
+
+    def reduce_scatter(self, x, axes, *, axis_sizes, axis: int = 0, op=None):
+        name = axes[0]
+        n = axis_sizes[name]
+        if n == 1:
+            return x
+        # move scatter dim to front, chunk it along the ring
+        moved = jnp.moveaxis(x, axis, 0)
+        assert moved.shape[0] % n == 0, "reduce_scatter dim must divide ring"
+        chunks = moved.reshape(n, moved.shape[0] // n, *moved.shape[1:])
+        flat = chunks.reshape(n, -1)
+        piece = self._ring_reduce_scatter(flat, name, n)
+        piece = piece.reshape(moved.shape[0] // n, *moved.shape[1:])
+        return jnp.moveaxis(piece, 0, axis)
+
+    def all_gather(self, x, axes, *, axis_sizes, axis: int = 0, tiled=True, op=None):
+        name = axes[0]
+        n = axis_sizes[name]
+        if n == 1:
+            return x
+        flat = x.reshape(-1)
+        buf = self._ring_all_gather(flat, name, n)   # (n, local)
+        parts = buf.reshape((n,) + x.shape)
+        moved = jnp.moveaxis(parts, 0, axis)
+        return moved.reshape(
+            x.shape[:axis] + (n * x.shape[axis],) + x.shape[axis + 1:])
+
+
+class HierarchicalNsm(Nsm):
+    """2-level psum for multi-axis reductions (the multi-pod stack).
+
+    psum over ("pod","data"): reduce_scatter over 'data' (fast), psum over
+    'pod' carrying only 1/|data| of the payload (slow axis), all_gather over
+    'data'. Cross-pod bytes drop by |data| (=16 in the production mesh).
+    """
+
+    name = "hierarchical"
+
+    def __init__(self, inner: Optional[Nsm] = None):
+        self.inner = inner or XlaNsm()
+
+    def psum(self, x, axes, *, axis_sizes, op=None):
+        if len(axes) < 2:
+            return self.inner.psum(x, axes, axis_sizes=axis_sizes, op=op)
+        # order axes fast->slow: reduce-scatter over all fast axes, psum on
+        # the slowest, gather back in reverse order.
+        slow, fast = axes[0], tuple(axes[1:])  # convention: axes[0] is slow ('pod')
+        n_fast = 1
+        for a in fast:
+            n_fast *= axis_sizes[a]
+        chunks, size, shape = _flatten_pad(x, n_fast)
+        fast_name = fast if len(fast) > 1 else fast[0]
+        piece = lax.psum_scatter(chunks, fast_name, scatter_dimension=0,
+                                 tiled=True)                  # (1, chunk)
+        piece = self.inner.psum(piece, (slow,), axis_sizes=axis_sizes, op=op)
+        full = lax.all_gather(piece, fast_name, axis=0, tiled=True)
+        return _unflatten(full, size, shape)
+
+
+class CompressedNsm(Nsm):
+    """int8-on-the-wire gradient transport for designated (slow) axes.
+
+    psum quantizes to int8 with a globally agreed scale, sums in int32 and
+    dequantizes — wire bytes halve vs bf16 (quarter vs f32). Intended for the
+    'pod' axis; error feedback is carried by the train loop (see
+    repro.train.train_loop). Non-psum verbs pass through the inner stack.
+    """
+
+    name = "compressed"
+
+    def __init__(self, inner: Optional[Nsm] = None,
+                 compress_axes: Tuple[str, ...] = ("pod",)):
+        self.inner = inner or XlaNsm()
+        self.compress_axes = tuple(compress_axes)
+
+    def psum(self, x, axes, *, axis_sizes, op=None):
+        comp = tuple(a for a in axes if a in self.compress_axes)
+        rest = tuple(a for a in axes if a not in self.compress_axes)
+        out = x
+        if rest:
+            out = self.inner.psum(out, rest, axis_sizes=axis_sizes, op=op)
+        if comp:
+            if not jnp.issubdtype(out.dtype, jnp.floating):
+                out = lax.psum(out, comp if len(comp) > 1 else comp[0])
+            else:
+                out = compression.compressed_psum(
+                    out, comp if len(comp) > 1 else comp[0],
+                    axis_sizes=tuple(axis_sizes[a] for a in comp))
+        return out
+
+
+class ShmNsm(Nsm):
+    """Colocated fast path: elide ops whose payload already satisfies the
+    destination sharding (op.op_data bit0 set by the CoreEngine when the
+    routing table proves source/destination compatibility)."""
+
+    name = "shm"
+
+    def __init__(self, inner: Optional[Nsm] = None):
+        self.inner = inner or XlaNsm()
+
+    def psum(self, x, axes, *, axis_sizes, op=None):
+        if op is not None and op.op_data & 1:
+            return x                      # already reduced: zero-copy move
+        return self.inner.psum(x, axes, axis_sizes=axis_sizes, op=op)
+
+    def all_gather(self, x, axes, *, axis_sizes, axis=0, tiled=True, op=None):
+        if op is not None and op.op_data & 1:
+            return x                      # already replicated
+        return self.inner.all_gather(x, axes, axis_sizes=axis_sizes,
+                                     axis=axis, tiled=tiled, op=op)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Nsm] = {}
+
+
+def register_nsm(nsm: Nsm) -> Nsm:
+    _REGISTRY[nsm.name] = nsm
+    return nsm
+
+
+def get_nsm(name: str) -> Nsm:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown NSM {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_nsms():
+    return sorted(_REGISTRY)
+
+
+register_nsm(XlaNsm())
+register_nsm(RingNsm())
+register_nsm(RingNsm(bidirectional=True))
+register_nsm(HierarchicalNsm())
+register_nsm(CompressedNsm())
+register_nsm(ShmNsm())

@@ -1,0 +1,71 @@
+"""Overlapped collective-matmul primitives (compute/comm overlap).
+
+The classic TPU "collective matmul" decompositions: instead of a blocking
+all-gather (or all-reduce) around a matmul, rotate shards around the ring
+with ``ppermute`` while the MXU consumes the shard already in hand. Each hop
+is an async ICI transfer XLA overlaps with the concurrent ``dot`` — the
+distributed-optimization trick the NetKernel architecture lets the operator
+deploy *under* unmodified model code.
+
+Used by the ring NSM policy for the FSDP all-gather -> matmul path and by
+the TP matmul -> reduce-scatter path; equivalence-tested in
+tests/test_collectives.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def all_gather_matmul(x: jax.Array, w_shard: jax.Array, axis: str, n: int):
+    """Compute ``x @ all_gather(w_shard, axis)`` with overlapped ring hops.
+
+    x:        (..., K)      replicated over ``axis``
+    w_shard:  (K/n, N)      row-shard of W held by this device
+    returns:  (..., N)      == x @ W, identical on every ring member
+
+    At step t the device multiplies the shard it currently holds (owner
+    ``(idx + t) % n``) against the matching K-slice of x while the shard is
+    forwarded to the next neighbour.
+    """
+    idx = lax.axis_index(axis)
+    perm = [(i, (i - 1) % n) for i in range(n)]   # shard flows upstream
+    k_blk = w_shard.shape[0]
+    out = jnp.zeros(x.shape[:-1] + (w_shard.shape[1],), x.dtype)
+    cur = w_shard
+    for t in range(n):
+        owner = (idx + t) % n
+        x_blk = lax.dynamic_slice_in_dim(x, owner * k_blk, k_blk, axis=-1)
+        out = out + jnp.einsum("...k,kn->...n", x_blk, cur)
+        if t != n - 1:
+            cur = lax.ppermute(cur, axis, perm)
+    return out
+
+
+def matmul_reduce_scatter(x: jax.Array, w_shard: jax.Array, axis: str, n: int):
+    """Compute ``reduce_scatter(x @ w_shard, axis)`` with overlapped hops.
+
+    x:        (M, K_local)  K-shard of the activation (TP contraction)
+    w_shard:  (K_local, N)  matching row-shard of W
+    returns:  (M/n, N)      this device's slice of sum_k x_k @ w_k
+
+    The partial product is computed one M-chunk at a time; the accumulator
+    ring-hops so each chunk visits every device exactly once, arriving at its
+    owner fully reduced.
+    """
+    idx = lax.axis_index(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    m = x.shape[0]
+    assert m % n == 0, "leading dim must divide the ring for reduce-scatter"
+    m_blk = m // n
+    acc = jnp.zeros((m_blk, w_shard.shape[1]), x.dtype)
+    for t in range(n):
+        # chunk that, after the remaining (n-1-t) downstream hops, lands on
+        # its owner: contribution from device r-j is always chunk r (mod n)
+        chunk_idx = (idx - t - 1) % n
+        x_blk = lax.dynamic_slice_in_dim(x, chunk_idx * m_blk, m_blk, axis=0)
+        acc = acc + jnp.einsum("mk,kn->mn", x_blk, w_shard)
+        if t != n - 1:
+            acc = lax.ppermute(acc, axis, perm)
+    return acc

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, DataPipeline, for_model
+
+__all__ = ["DataConfig", "DataPipeline", "for_model"]

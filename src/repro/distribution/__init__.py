@@ -1,0 +1,10 @@
+from repro.distribution.sharding import (
+    LOGICAL_RULES, ParamDesc, ShardingCtx, abstract_params, constrain,
+    init_params, padded_heads, param_shardings, sharding_for, spec_for,
+)
+
+__all__ = [
+    "LOGICAL_RULES", "ParamDesc", "ShardingCtx", "abstract_params",
+    "constrain", "init_params", "padded_heads", "param_shardings",
+    "sharding_for", "spec_for",
+]

@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis (optional).
+
+Stages live on pod-axis members; microbatches flow stage-to-stage through
+``ppermute`` hops (NetKernel's ppermute verb — the pipeline's "wire" is
+routable like any other collective). Schedule: plain GPipe fill/drain,
+T = n_micro + n_stages - 1 ticks; each tick every stage processes the
+microbatch it holds and forwards the result downstream.
+
+This is the forward pipeline (inference / activation flow). It composes
+with jax.grad (XLA differentiates through the ppermute ring), which is
+exercised by tests/test_pipeline.py's loss-equivalence check.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(stage_params, x, stage_fn: Callable, *, mesh,
+                     n_micro: int, axis: str = "pod"):
+    """Run ``x`` through ``n_stages = |axis|`` stages of ``stage_fn``.
+
+    stage_params: pytree with leading dim = n_stages (sharded over ``axis``).
+    x: (B, ...) global batch; B % n_micro == 0.
+    stage_fn(params_slice, x_mb) -> y_mb (same shape as x_mb).
+    Returns y: (B, ...) — the last stage's outputs in microbatch order.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_stages = sizes[axis]
+    b = x.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    mb = x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def local(params_local, mbs):
+        # params_local: leading dim 1 (this stage); mbs: all microbatches
+        # (replicated across the axis — only stage 0 consumes them).
+        idx = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params_local)
+        ticks = n_micro + n_stages - 1
+        hold = jnp.zeros_like(mbs[0])            # microbatch in flight here
+        outs = jnp.zeros_like(mbs)               # filled by the last stage
+
+        def tick(carry, t):
+            hold, outs = carry
+            # stage 0 ingests microbatch t (if any); others use what arrived
+            take = jnp.where(t < n_micro, t, 0)
+            incoming = jnp.where((idx == 0) & (t < n_micro),
+                                 mbs[take], hold)
+            y = stage_fn(p, incoming)
+            # last stage emits microbatch (t - n_stages + 1)
+            out_idx = t - (n_stages - 1)
+            emit = (idx == n_stages - 1) & (out_idx >= 0)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(emit, y, outs[jnp.maximum(out_idx, 0)]),
+                jnp.maximum(out_idx, 0), axis=0)
+            # forward activations downstream
+            hold = jax.lax.ppermute(y, axis, fwd_perm)
+            return (hold, outs), None
+
+        (hold, outs), _ = jax.lax.scan(tick, (hold, outs),
+                                       jnp.arange(ticks))
+        # broadcast the last stage's outputs to everyone (masked psum:
+        # ppermute is a strict permutation, it cannot fan out)
+        outs = jax.lax.psum(
+            jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    y = jax.shard_map(local, mesh=mesh,
+                      in_specs=(pspec, P()), out_specs=P(),
+                      axis_names={axis}, check_vma=False)(stage_params, mb)
+    return y.reshape((b,) + x.shape[1:])

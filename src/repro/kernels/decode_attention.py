@@ -1,0 +1,104 @@
+"""Pallas TPU decode attention: one query token vs a (sharded) KV cache.
+
+Grid walks (batch, kv blocks); the query row (H, d) stays resident in VMEM
+while cache blocks stream through. Emits per-shard partial stats (o, m, l)
+so the context-parallel decode path can LSE-combine across the model axis
+(the ``psum`` the serve engine's distributed decode performs) — the kernel
+is the *local* half of distributed flash-decode.
+
+VMEM working set per program: q (H,d) + k/v blocks (kvb, H*d slice) + acc —
+with H<=128, d<=192, kvb=512: ~3 MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   m_sc, l_sc, acc_sc, *, scale: float, kv_block: int,
+                   kv_len: int):
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    pos = pos_ref[0]
+    k_lo = jk * kv_block
+    q = q_ref[...]                       # (H, d)
+    kb = k_ref[...]                      # (kvb, H, d)
+    vb = v_ref[...]
+    # per-head scores: contract d with h as a shared (batch-like) dim
+    s = jnp.einsum("hd,thd->ht", q.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale      # (H, kvb)
+    t_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (t_pos <= pos) & (t_pos < kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * corr[:, None] + jnp.einsum(
+        "ht,thd->hd", p, vb.astype(jnp.float32))
+    m_sc[...] = m_new
+
+    @pl.when(jk == pl.num_programs(1) - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[...] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+        m_ref[...] = m_sc[...]
+        l_ref[...] = l_sc[...]
+
+
+def decode_attention(q, k, v, pos, *, scale=None, kv_block=512,
+                     interpret=True):
+    """q: (B,H,d); k,v: (B,T,H,d) (kv already GQA-expanded or H==KV);
+    pos: (B,). Returns (o (B,H,d), m (B,H), l (B,H))."""
+    b, h, d = q.shape
+    t = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(d)
+    kv_block = min(kv_block, t)
+    t_pad = -(-t // kv_block) * kv_block
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    grid = (b, t_pad // kv_block)
+    o, m, l = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, kv_block=kv_block,
+                          kv_len=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((None, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, kv_block, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, kv_block, h, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)
+    return o, m, l

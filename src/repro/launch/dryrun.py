@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host placeholder devices.
+
+For every cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers + compiles the cell's step (train_step / prefill_step /
+     serve_step) with full parameter/optimizer/cache shardings,
+  3. prints ``compiled.memory_analysis()`` (fits-per-chip proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parses the compiled HLO for the collective schedule (§Roofline's
+     collective term),
+  5. [single-pod] runs the layer-differencing cost probes (see roofline.py),
+  6. writes a JSON artifact to results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all                 # every runnable cell
+  python -m repro.launch.dryrun --all --multi-pod
+  python -m repro.launch.dryrun --report              # assemble tables
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCHS, SHAPES, RunConfig, get_config, get_shape, shape_applicable,
+)
+from repro.distribution.sharding import (
+    ShardingCtx, abstract_params, param_shardings,
+)
+from repro.launch import roofline as rl
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models.model import (
+    build_schedule, cache_schema, forward_decode, forward_prefill,
+    input_specs, model_schema,
+)
+from repro.train.train_loop import (
+    batch_shardings, make_train_state, make_train_step, state_shardings,
+)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def run_config_for(arch: str, shape_name: str, probe: bool = False) -> RunConfig:
+    """Operator-side per-cell parallelism/numerics table (see DESIGN.md §4).
+
+    Small/medium dense archs train pure-FSDP (batch over the whole mesh);
+    MoE + the 340B dense train 2D (FSDP x TP) with sequence-parallel
+    activations; >=300B models use bf16 moments, factored second moment and
+    gradient accumulation to fit 16 GB/chip. Serving shapes always use the
+    2D rules (batch over data, KV-sequence context-parallel over model).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    nparams = cfg.num_params()
+    seq = shape.seq_len
+    blk = 512 if seq <= 4096 else 2048
+    kw: Dict = dict(
+        attn_q_block=blk, attn_kv_block=blk, remat="full",
+        force_unroll_segments=probe,
+    )
+    if shape.kind == "train":
+        if cfg.moe is not None or nparams > 60e9:
+            kw["rules_variant"] = "2d"
+            kw["seq_parallel_activations"] = True
+        else:
+            kw["rules_variant"] = "fsdp"
+        if nparams > 100e9:
+            kw.update(moment_dtype="bfloat16", factored_nu=True,
+                      grad_accum_dtype="bfloat16",
+                      grad_accum=16 if nparams > 300e9 else
+                      (8 if nparams > 200e9 else 4))
+    elif shape.kind == "decode":
+        # serving: never gather weights per token — TP when they fit
+        # replicated over 'data' (<~60B at 16-way model sharding)
+        kw["rules_variant"] = "tp" if nparams < 60e9 else "2d"
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg, shape, mesh, rcfg):
+    """Returns (fn, args, in_shardings, donate) for jit."""
+    from repro.distribution.sharding import make_rules
+    rules = make_rules(rcfg.rules_variant)
+    shd = ShardingCtx(mesh, rules=rules,
+                      seq_parallel=rcfg.seq_parallel_activations)
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        step = make_train_step(cfg, rcfg, mesh)
+        state = make_train_state(cfg, rcfg, mesh, abstract=True)
+        ssh = state_shardings(cfg, rcfg, mesh)
+        bsh = batch_shardings(cfg, mesh, rcfg=rcfg,
+                              global_batch=shape.global_batch)
+        batch = {k: specs[k] for k in bsh}
+        return step, (state, batch), (ssh, bsh), (0,)
+    from repro.distribution.sharding import sharding_for
+    params = abstract_params(model_schema(cfg, mesh))
+    psh = param_shardings(model_schema(cfg, mesh), mesh, rules)
+    b = shape.global_batch
+    tok_sh = sharding_for((b, 1), ("batch", None), mesh, rules)
+    if shape.kind == "prefill":
+        def prefill_fn(p, tokens, frames=None):
+            return forward_prefill(p, tokens, cfg, shd, rcfg,
+                                   max_seq=shape.seq_len, frames=frames)
+        args = [params, specs["tokens"]]
+        insh = [psh, tok_sh]
+        if cfg.encoder_layers:
+            args.append(specs["frames"])
+            insh.append(sharding_for((b, 1, 1), ("batch", None, None), mesh))
+        return prefill_fn, tuple(args), tuple(insh), ()
+    # decode (serve_step): one new token against a seq_len cache
+    csh = param_shardings(cache_schema(cfg, shape.global_batch,
+                                       shape.seq_len), mesh, rules)
+
+    def serve_step(p, caches, tokens, pos):
+        return forward_decode(p, caches, tokens, pos, cfg, shd, rcfg)
+
+    pos_sh = sharding_for((b,), ("batch",), mesh, rules)
+    return (serve_step,
+            (params, specs["caches"], specs["tokens"], specs["pos"]),
+            (psh, csh, tok_sh, pos_sh), (1,))
+
+
+def lower_compile(cfg, shape, mesh, rcfg) -> Tuple[object, float, float]:
+    fn, args, insh, donate = build_cell(cfg, shape, mesh, rcfg)
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=insh,
+                      donate_argnums=donate).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, t1 - t0, t2 - t1
+
+
+# ---------------------------------------------------------------------------
+# Layer-differencing probes (single-pod roofline)
+# ---------------------------------------------------------------------------
+
+
+def probe_pair(cfg):
+    """(cfgA, cfgB, extra_scanned_layers, scanned_layers_in_prod)."""
+    if cfg.family == "hybrid":
+        a = dataclasses.replace(cfg, num_layers=5, global_attn_layers=(0, 2, 4))
+        b = dataclasses.replace(cfg, num_layers=7, global_attn_layers=(0, 3, 6))
+        return a, b, 2, cfg.num_layers - len(cfg.global_attn_layers)
+    prefix = cfg.dense_layer_prefix if cfg.moe is not None else 0
+    a = dataclasses.replace(cfg, num_layers=prefix + 1)
+    b = dataclasses.replace(cfg, num_layers=prefix + 2)
+    return a, b, 1, cfg.num_layers - prefix
+
+
+def run_probes(cfg, shape, mesh) -> Dict:
+    """Layer-differencing FLOP probes (bytes come from the full artifact's
+    post-fusion HLO accounting instead — XLA CPU cost_analysis reports
+    pre-fusion bytes, measured ~10x real traffic)."""
+    rcfg = run_config_for(cfg.name, shape.name, probe=True)
+    # grad accumulation is a scan: cost_analysis would count one microbatch
+    # only. Probes always run the full batch in a single microbatch.
+    rcfg = dataclasses.replace(rcfg, grad_accum=1)
+    ca, cb, extra, scanned_prod = probe_pair(cfg)
+    costs = []
+    for c in (ca, cb):
+        compiled, tl, tc = lower_compile(c, shape, mesh, rcfg)
+        costs.append(compiled.cost_analysis())
+    fa, fb = costs[0].get("flops", 0.0), costs[1].get("flops", 0.0)
+    per_flops = max(fb - fa, 0.0) / extra
+    fixed_flops = max(fa - _probe_scanned_layers(ca, cfg) * per_flops, 0.0)
+    return {"flops_per_chip": fixed_flops + scanned_prod * per_flops,
+            "per_layer_flops": per_flops, "fixed_flops": fixed_flops,
+            "probe_bytes_upper_bound": [costs[0].get("bytes accessed", 0.0),
+                                        costs[1].get("bytes accessed", 0.0)]}
+
+
+def _probe_scanned_layers(probe_cfg, prod_cfg) -> int:
+    if prod_cfg.family == "hybrid":
+        return probe_cfg.num_layers - len(probe_cfg.global_attn_layers)
+    prefix = prod_cfg.dense_layer_prefix if prod_cfg.moe is not None else 0
+    return probe_cfg.num_layers - prefix
+
+
+# ---------------------------------------------------------------------------
+# Cell driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             with_probes: bool = True, out_dir: Optional[str] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": 512 if multi_pod else 256,
+                 "model_flops_global": rl.model_flops(cfg, shape)}
+    if not ok:
+        rec.update(skipped=True, skip_reason=why)
+        _write(rec, out_dir)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({why})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rcfg = run_config_for(arch, shape_name)
+    compiled, t_lower, t_compile = lower_compile(cfg, shape, mesh, rcfg)
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    per_chip_gb = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                   + ma.output_size_in_bytes) / 1e9
+    txt = compiled.as_text()
+    coll_total, coll_kinds = rl.collective_bytes(txt)
+    hbm_traffic = rl.hlo_traffic_bytes(txt)
+    rec.update(
+        skipped=False,
+        compile_seconds=t_lower + t_compile,
+        memory={"argument_gb": ma.argument_size_in_bytes / 1e9,
+                "temp_gb": ma.temp_size_in_bytes / 1e9,
+                "output_gb": ma.output_size_in_bytes / 1e9,
+                "total_gb": per_chip_gb,
+                "fits_16gb": bool(per_chip_gb < rl.HBM_BYTES / 1e9)},
+        cost_analysis={"flops": ca.get("flops", 0.0),
+                       "bytes_accessed": ca.get("bytes accessed", 0.0)},
+        hbm_traffic_bytes_per_chip=hbm_traffic,
+        collectives={"payload_bytes_per_chip": coll_total,
+                     "by_kind": coll_kinds},
+    )
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: compiled in "
+          f"{t_lower + t_compile:.1f}s")
+    print(f"  memory_analysis: {per_chip_gb:.2f} GB/chip "
+          f"(args {ma.argument_size_in_bytes / 1e9:.2f} + temp "
+          f"{ma.temp_size_in_bytes / 1e9:.2f}) fits16GB="
+          f"{per_chip_gb < 16.0}")
+    print(f"  cost_analysis: flops/chip={ca.get('flops', 0):.3e} "
+          f"bytes/chip={ca.get('bytes accessed', 0):.3e} (scan body once)")
+    print(f"  collectives/chip: {coll_total / 1e9:.3f} GB  {coll_kinds}")
+
+    if not with_probes and not multi_pod:
+        # refresh pass: reuse previously computed probes if present on disk
+        name = f"{arch}__{shape_name}__{mesh_name}.json"
+        path = os.path.join(out_dir or RESULTS, name)
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    old = json.load(f)
+                if "probes" in old and "flops_per_chip" in old["probes"]:
+                    rec["probes"] = old["probes"]
+                    with_probes = True
+            except Exception:
+                pass
+    if with_probes and not multi_pod:
+        probes = rec.get("probes") or run_probes(cfg, shape, mesh)
+        rec["probes"] = probes
+        cell = rl.RooflineCell(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=rec["chips"],
+            flops_per_chip=probes["flops_per_chip"],
+            hbm_bytes_per_chip=hbm_traffic,
+            coll_bytes_per_chip=coll_total, coll_by_kind=coll_kinds,
+            model_flops_global=rec["model_flops_global"],
+            memory_per_chip_gb=per_chip_gb,
+            compile_seconds=rec["compile_seconds"],
+            ideal_bytes_global=rl.ideal_bytes(cfg, shape))
+        rec["roofline"] = cell.to_json()
+        print(f"  roofline: t_comp={rl.fmt_seconds(cell.t_compute)} "
+              f"t_mem={rl.fmt_seconds(cell.t_memory)} "
+              f"t_coll={rl.fmt_seconds(cell.t_collective)} "
+              f"dominant={cell.dominant} useful={cell.useful_ratio:.2f} "
+              f"frac={cell.roofline_fraction:.2%}")
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: Dict, out_dir: Optional[str]):
+    """Merge-write: refresh passes keep fields they didn't recompute
+    (e.g. --no-probes keeps an earlier run's probes/roofline)."""
+    out_dir = out_dir or RESULTS
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path = os.path.join(out_dir, name)
+    merged: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except Exception:
+            merged = {}
+    merged.update(rec)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=str)
+    rec.clear()
+    rec.update(merged)
+
+
+def report(out_dir: Optional[str] = None) -> str:
+    out_dir = out_dir or RESULTS
+    cells = []
+    recs = []
+    for name in sorted(os.listdir(out_dir)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, name)) as f:
+            recs.append(json.load(f))
+    lines = ["| arch | shape | mesh | compile | mem/chip | fits | "
+             "collective GB/chip |", "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP: {r['skip_reason'][:40]} | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_seconds']:.1f}s | {r['memory']['total_gb']:.2f} GB |"
+            f" {'Y' if r['memory']['fits_16gb'] else 'N'} | "
+            f"{r['collectives']['payload_bytes_per_chip'] / 1e9:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS))
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.report:
+        print(report(args.out))
+        return
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        try:
+            run_cell(a, s, args.multi_pod, with_probes=not args.no_probes,
+                     out_dir=args.out)
+        except Exception:
+            failures.append((a, s))
+            print(f"[dryrun] FAILED {a} x {s}:\n{traceback.format_exc()}")
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

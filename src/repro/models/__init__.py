@@ -1,0 +1,10 @@
+from repro.models.model import (
+    Segment, build_params, build_schedule, cache_schema, forward_decode,
+    forward_prefill, forward_train, input_specs, model_schema,
+)
+
+__all__ = [
+    "Segment", "build_params", "build_schedule", "cache_schema",
+    "forward_decode", "forward_prefill", "forward_train", "input_specs",
+    "model_schema",
+]

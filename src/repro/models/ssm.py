@@ -1,0 +1,243 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train path + O(1) decode.
+
+Follows the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): quadratic
+attention-like compute *within* chunks, linear state recurrence *across*
+chunks. The intra-chunk part is the compute hot spot targeted by the Pallas
+kernel (repro/kernels/ssd_scan.py); this module is the production JAX path
+and the oracle's substrate.
+
+Layout: x (B, L, H, P) heads; B/C (B, L, N) single group; dt (B, L, H).
+State: (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distribution.sharding import ParamDesc, ShardingCtx
+from repro.models.layers import apply_norm, f32, norm_schema
+
+
+def ssm_schema(cfg: ModelConfig, mesh) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    n = s.state_dim
+    w = s.conv_width
+    pd = cfg.param_dtype
+    return {
+        "w_x": ParamDesc((d, di), ("embed", "ffn"), pd),
+        "w_z": ParamDesc((d, di), ("embed", "ffn"), pd),
+        "w_B": ParamDesc((d, n), ("embed", None), pd),
+        "w_C": ParamDesc((d, n), ("embed", None), pd),
+        "w_dt": ParamDesc((d, nh), ("embed", "ssm_heads"), pd),
+        "w_out": ParamDesc((di, d), ("ffn", "embed"), pd),
+        "conv_x": ParamDesc((w, di), ("conv", "ffn"), pd, "small_normal", 0.5),
+        "conv_B": ParamDesc((w, n), ("conv", None), pd, "small_normal", 0.5),
+        "conv_C": ParamDesc((w, n), ("conv", None), pd, "small_normal", 0.5),
+        "A_log": ParamDesc((nh,), ("ssm_heads",), "float32", "zeros"),
+        "D": ParamDesc((nh,), ("ssm_heads",), "float32", "ones"),
+        "dt_bias": ParamDesc((nh,), ("ssm_heads",), "float32", "zeros"),
+        "norm": norm_schema(di, "rmsnorm", pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width W), train + streaming forms
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (B, L, C); w: (W, C) depthwise. Causal: y[t] = sum_j w[j]*u[t-W+1+j]."""
+    W = w.shape[0]
+    y = u * w[-1]
+    for j in range(W - 1):
+        shift = W - 1 - j
+        y = y + jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] * w[j]
+    return y
+
+
+def conv_step(u_t: jax.Array, state: jax.Array, w: jax.Array):
+    """u_t: (B, C); state: (B, W-1, C) past inputs. Returns (y_t, state')."""
+    full = jnp.concatenate([state, u_t[:, None]], axis=1)    # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w)
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T). Returns (..., T, T): sum_{k=j+1..i} x[k] on i>=j, -inf above."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(T)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, dA, B, C, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """SSD scan. xdt: (b,l,h,p) = x*dt; dA: (b,l,h) = dt*A (negative);
+    B, C: (b,l,n). Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l_real, h, p = xdt.shape
+    n = B.shape[-1]
+    # pad to a chunk multiple: trailing zeros in xdt and dA=0 (decay exp(0)=1)
+    # leave the recurrence and final state untouched; outputs are sliced.
+    l = -(-l_real // chunk) * chunk
+    if l != l_real:
+        pad = ((0, 0), (0, l - l_real))
+        xdt = jnp.pad(xdt, pad + ((0, 0), (0, 0)))
+        dA = jnp.pad(dA, pad + ((0, 0),))
+        B = jnp.pad(B, pad + ((0, 0),))
+        C = jnp.pad(C, pad + ((0, 0),))
+    nc = l // chunk
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,c,Q)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    A_cum = jnp.cumsum(dAc, axis=-1)                           # (b,h,c,Q)
+    L = jnp.exp(_segsum(dAc))                                  # (b,h,c,Q,Q)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    G = jnp.einsum("bcln,bcsn->bcls", Cc, Bc,
+                   preferred_element_type=jnp.float32)         # (b,c,Q,Q)
+    M = G[:, None] * L                                         # (b,h,c,Q,Q)? no:
+    # G is (b,c,Q,Q); L is (b,h,c,Q,Q) -> broadcast over h
+    M = jnp.einsum("bcls,bhcls->bhcls", G, L)
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", M.astype(xdt.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)            # (b,h,c,Q)
+    xd = jnp.einsum("bhcl,bclhp->bclhp", decay_states.astype(xdt.dtype), xc)
+    states = jnp.einsum("bcln,bclhp->bchpn", Bc, xd,
+                        preferred_element_type=jnp.float32)    # (b,c,h,p,n)
+
+    # --- inter-chunk recurrence (linear scan over chunks) ---
+    chunk_decay = jnp.exp(A_cum[..., -1])                      # (b,h,c)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else f32(initial_state))
+
+    def step(carry, xs):
+        st, dec = xs                                           # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit entering state
+
+    sc = states.transpose(1, 0, 2, 3, 4)                       # (c,b,h,p,n)
+    dc = chunk_decay.transpose(2, 0, 1)                        # (c,b,h)
+    final_state, entering = jax.lax.scan(step, s0, (sc, dc))
+    entering = entering.transpose(1, 0, 2, 3, 4)               # (b,c,h,p,n)
+
+    # --- inter-chunk output ---
+    state_decay = jnp.exp(A_cum)                               # (b,h,c,Q)
+    y_off = jnp.einsum("bcln,bchpn->bclhp", Cc,
+                       entering.astype(xdt.dtype),
+                       preferred_element_type=jnp.float32)
+    y_off = y_off * state_decay.transpose(0, 2, 3, 1)[..., None]
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :l_real]
+    return y, final_state
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, state):
+    """One-token SSD update. x_t: (b,h,p); dt_t: (b,h); A: (h,) negative;
+    B_t, C_t: (b,n); state: (b,h,p,n). Returns (y (b,h,p), state')."""
+    dA = jnp.exp(f32(dt_t) * A)                                # (b,h)
+    xdt = f32(x_t) * f32(dt_t)[..., None]
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, f32(B_t))
+    state = f32(state) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, f32(C_t))
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full block (projections + conv + SSD + gate + out)
+# ---------------------------------------------------------------------------
+
+
+def ssm_block(p, x, cfg: ModelConfig, shd: ShardingCtx, rcfg, *,
+              cache: Optional[Dict] = None, decode: bool = False):
+    """x: (B,L,D) (train) or (B,1,D) (decode). Returns (y, cache')."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    hp = s.head_dim
+    A = -jnp.exp(f32(p["A_log"]))
+
+    z = jnp.einsum("bld,de->ble", x, p["w_z"])
+    xs = jnp.einsum("bld,de->ble", x, p["w_x"])
+    Bs = jnp.einsum("bld,dn->bln", x, p["w_B"])
+    Cs = jnp.einsum("bld,dn->bln", x, p["w_C"])
+    dts = jnp.einsum("bld,dh->blh", x, p["w_dt"])
+    dt = jax.nn.softplus(f32(dts) + f32(p["dt_bias"]))
+
+    if not decode:
+        xs_pre, Bs_pre, Cs_pre = xs, Bs, Cs      # pre-conv streams (cache tails)
+        xs = jax.nn.silu(f32(causal_conv(xs, p["conv_x"]))).astype(x.dtype)
+        Bs = jax.nn.silu(f32(causal_conv(Bs, p["conv_B"]))).astype(x.dtype)
+        Cs = jax.nn.silu(f32(causal_conv(Cs, p["conv_C"]))).astype(x.dtype)
+        xh = xs.reshape(*xs.shape[:2], nh, hp)
+        xdt = (f32(xh) * dt[..., None]).astype(x.dtype)
+        dA = dt * A
+        y, state = ssd_chunked(xdt, dA, Bs, Cs, s.chunk)
+        yD = y + f32(xh) * f32(p["D"])[None, None, :, None]
+        yflat = yD.reshape(*yD.shape[:2], di).astype(x.dtype)
+        gated = yflat * jax.nn.silu(f32(z)).astype(x.dtype)
+        out = jnp.einsum("ble,ed->bld", apply_norm(p["norm"], gated, "rmsnorm"),
+                         p["w_out"])
+        new_cache = None
+        if cache is not None:
+            # preload conv tails (pre-conv streams) for streaming continuation
+            w = s.conv_width
+            new_cache = {
+                "state": state.astype(cache["state"].dtype),
+                "conv_x": xs_pre[:, -(w - 1):].astype(cache["conv_x"].dtype),
+                "conv_B": Bs_pre[:, -(w - 1):].astype(cache["conv_B"].dtype),
+                "conv_C": Cs_pre[:, -(w - 1):].astype(cache["conv_C"].dtype),
+            }
+        return out, new_cache
+
+    # ---- decode ----
+    assert cache is not None
+    xc, cx = conv_step(xs[:, 0], cache["conv_x"].astype(x.dtype), p["conv_x"])
+    Bc, cB = conv_step(Bs[:, 0], cache["conv_B"].astype(x.dtype), p["conv_B"])
+    Cc, cC = conv_step(Cs[:, 0], cache["conv_C"].astype(x.dtype), p["conv_C"])
+    xc = jax.nn.silu(f32(xc)).astype(x.dtype)
+    Bc = jax.nn.silu(f32(Bc)).astype(x.dtype)
+    Cc = jax.nn.silu(f32(Cc)).astype(x.dtype)
+    xh = xc.reshape(-1, nh, hp)
+    y, state = ssd_decode_step(xh, dt[:, 0], A, Bc, Cc,
+                               f32(cache["state"]))
+    y = y + f32(xh).astype(x.dtype) * f32(p["D"])[None, :, None].astype(x.dtype)
+    yflat = y.reshape(-1, 1, di)
+    gated = yflat * jax.nn.silu(f32(z)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", apply_norm(p["norm"], gated, "rmsnorm"),
+                     p["w_out"])
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv_x": cx.astype(cache["conv_x"].dtype),
+                 "conv_B": cB.astype(cache["conv_B"].dtype),
+                 "conv_C": cC.astype(cache["conv_C"].dtype)}
+    return out, new_cache
+
+
+def ssm_cache_schema(cfg: ModelConfig, batch: int, dtype: str) -> Dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    w = s.conv_width
+    return {
+        "state": ParamDesc((batch, nh, s.head_dim, s.state_dim),
+                           ("batch", "ssm_heads", None, None), "float32", "zeros"),
+        "conv_x": ParamDesc((batch, w - 1, di), ("batch", None, "ffn"), dtype, "zeros"),
+        "conv_B": ParamDesc((batch, w - 1, s.state_dim), ("batch", None, None), dtype, "zeros"),
+        "conv_C": ParamDesc((batch, w - 1, s.state_dim), ("batch", None, None), dtype, "zeros"),
+    }

@@ -1,0 +1,148 @@
+"""Multi-tenant serving engine: continuous batching over shared decode steps.
+
+The NetKernel multiplexing story (use case 1) in serving terms: one engine
+("NSM") serves requests from many tenants ("VMs"). Decode slots are the
+shared resource; the TenantScheduler (CoreEngine control plane) decides
+admission with fairness/rate policies; weights are shared by all tenants of
+the same model (the shared-memory use case — tenants never hold their own
+copy). Model code is untouched: prefill/decode are the same pure functions
+the dry-run lowers for 256-chip meshes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distribution.sharding import ShardingCtx, init_params
+from repro.models.model import (
+    cache_schema, forward_decode, forward_prefill, model_schema,
+)
+from repro.serve.scheduler import Request, TenantScheduler
+
+
+@dataclass
+class Slot:
+    active: bool = False
+    req: Optional[Request] = None
+    pos: int = 0           # next write position (== tokens so far - 1)
+    remaining: int = 0
+
+
+class ServeEngine:
+    """Slot-based continuous batching engine (greedy decoding)."""
+
+    def __init__(self, cfg: ModelConfig, rcfg: RunConfig, mesh, params=None,
+                 *, batch_slots: int = 8, max_seq: int = 256,
+                 scheduler: Optional[TenantScheduler] = None, key=None):
+        self.cfg, self.rcfg, self.mesh = cfg, rcfg, mesh
+        self.B, self.max_seq = batch_slots, max_seq
+        self.shd = ShardingCtx(mesh)
+        self.scheduler = scheduler or TenantScheduler()
+        self.params = params if params is not None else init_params(
+            model_schema(cfg, mesh), key or jax.random.PRNGKey(0))
+        self.slots = [Slot() for _ in range(batch_slots)]
+        self.caches = init_params(
+            cache_schema(cfg, batch_slots, max_seq), jax.random.PRNGKey(1))
+        self.steps = 0
+        self.decode_steps = 0
+        self.completed: List[Request] = []
+        self.step_times: List[float] = []
+
+        cfg_, rcfg_, shd_ = cfg, rcfg, self.shd
+
+        def _prefill(params, tokens):
+            return forward_prefill(params, tokens, cfg_, shd_, rcfg_,
+                                   max_seq=max_seq)
+
+        def _decode(params, caches, tokens, pos):
+            logits, caches = forward_decode(params, caches, tokens, pos,
+                                            cfg_, shd_, rcfg_)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.scheduler.submit(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                return i
+        return None
+
+    def _admit(self, now=None):
+        while True:
+            i = self._free_slot()
+            if i is None:
+                return
+            req = self.scheduler.next_request(now)
+            if req is None:
+                return
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            last_logits, caches1 = self._prefill(self.params, prompt)
+            # install the single-sequence cache into slot i
+            self.caches = jax.tree.map(
+                lambda big, one: big.at[:, i].set(one[:, 0].astype(big.dtype)),
+                self.caches, caches1)
+            first = int(jnp.argmax(last_logits[0]))
+            req.generated.append(first)
+            self.slots[i] = Slot(active=True, req=req,
+                                 pos=len(req.prompt),
+                                 remaining=req.max_new_tokens - 1)
+            self.scheduler.account(req.tenant_id, len(req.prompt))
+
+    def step(self, now=None) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        t0 = time.monotonic()
+        self._admit(now)
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return 0
+        tokens = np.zeros((self.B, 1), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tokens[i, 0] = s.req.generated[-1]
+                pos[i] = s.pos
+        nxt, self.caches = self._decode(self.params, self.caches,
+                                        jnp.asarray(tokens), jnp.asarray(pos))
+        nxt = np.asarray(nxt)
+        for i in active:
+            s = self.slots[i]
+            s.req.generated.append(int(nxt[i]))
+            s.pos += 1
+            s.remaining -= 1
+            self.scheduler.account(s.req.tenant_id, 1)
+            if s.remaining <= 0 or s.pos >= self.max_seq - 1:
+                s.req.finish_time = time.monotonic()
+                self.completed.append(s.req)
+                self.slots[i] = Slot()
+        self.decode_steps += 1
+        self.step_times.append(time.monotonic() - t0)
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10000) -> Dict:
+        n = 0
+        while (self.scheduler.pending() or
+               any(s.active for s in self.slots)) and n < max_steps:
+            self.step()
+            n += 1
+        return {"decode_steps": self.decode_steps,
+                "completed": len(self.completed),
+                "shares": self.scheduler.shares()}
+
+    # -- utilization metrics ------------------------------------------------
+    def slot_utilization(self) -> float:
+        if not self.decode_steps:
+            return 0.0
+        served = sum(len(r.generated) for r in self.completed)
+        return served / max(self.decode_steps * self.B, 1)

@@ -1,0 +1,13 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import adamw_update, cosine_schedule, init_opt_state
+from repro.train.runner import FailurePlan, Runner, StragglerWatchdog
+from repro.train.train_loop import (
+    batch_shardings, loss_fn, make_train_state, make_train_step,
+    state_shardings,
+)
+
+__all__ = [
+    "CheckpointManager", "adamw_update", "cosine_schedule", "init_opt_state",
+    "FailurePlan", "Runner", "StragglerWatchdog", "batch_shardings",
+    "loss_fn", "make_train_state", "make_train_step", "state_shardings",
+]

@@ -1,0 +1,123 @@
+"""AdamW with configurable moment dtype + cosine schedule + global clipping.
+
+Self-contained (no optax in this environment). Moments can be kept in
+bfloat16 for >=100B-parameter models (nemotron-4-340b at 256 chips needs it;
+see DESIGN.md §4); bias correction runs in f32 regardless.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+def cosine_schedule(rcfg: RunConfig):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = rcfg.learning_rate * (step + 1) / max(rcfg.warmup_steps, 1)
+        t = jnp.clip((step - rcfg.warmup_steps)
+                     / max(rcfg.total_steps - rcfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * rcfg.learning_rate * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < rcfg.warmup_steps, warm, cos)
+    return lr
+
+
+def _decay_mask(params):
+    """No weight decay for 1-D params (norm scales, biases, A_log, ...)."""
+    return jax.tree.map(lambda p: jnp.asarray(p.ndim >= 2, jnp.float32), params)
+
+
+def _nu_shapes(p_shape, factored: bool):
+    """Second-moment leaf layout: full, or Adafactor row/col factors over
+    the last two dims (stacked layer dims are kept)."""
+    if not factored or len(p_shape) < 2:
+        return {"full": p_shape}
+    return {"vr": p_shape[:-1], "vc": p_shape[:-2] + p_shape[-1:]}
+
+
+def init_opt_state(params, rcfg: RunConfig) -> Dict:
+    mdt = jnp.dtype(rcfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def nu_leaf(p):
+        # row/col factors stay f32: they're tiny and precision matters
+        return {k: jnp.zeros(s, jnp.float32 if rcfg.factored_nu and k != "full"
+                             else mdt)
+                for k, s in _nu_shapes(p.shape, rcfg.factored_nu).items()}
+
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(nu_leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, opt_state, rcfg: RunConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    lr = cosine_schedule(rcfg)(opt_state["count"])
+    b1, b2 = rcfg.beta1, rcfg.beta2
+    eps = 1e-8
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, rcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if rcfg.grad_clip > 0 else jnp.float32(1.0)
+    count = opt_state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    # moment math dtype: f32 normally; bf16 when moments are stored bf16
+    # (>=100B models) — halves the optimizer's elementwise-chain temporaries
+    # per chip; bias correction and the factored-nu reconstruction stay f32.
+    cdt = jnp.bfloat16 if rcfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def nu_update(nu, g2):
+        if "full" in nu:
+            nu_f = nu["full"].astype(cdt) * b2 + jnp.asarray(1 - b2, cdt) * g2
+            return {"full": nu_f.astype(nu["full"].dtype)}, nu_f
+        g2f = g2.astype(jnp.float32)
+        vr = nu["vr"] * b2 + (1 - b2) * jnp.mean(g2f, axis=-1)
+        vc = nu["vc"] * b2 + (1 - b2) * jnp.mean(g2f, axis=-2)
+        denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+        nu_f = (vr[..., None] * vc[..., None, :] / denom[..., None]).astype(cdt)
+        return {"vr": vr, "vc": vc}, nu_f
+
+    def upd_one(p, g, mu, nu, m):
+        g = g.astype(cdt) * jnp.asarray(scale, cdt)
+        mu_f = mu.astype(cdt) * jnp.asarray(b1, cdt) + jnp.asarray(1 - b1, cdt) * g
+        new_nu, nu_f = nu_update(nu, (g * g).astype(cdt))
+        step = (mu_f.astype(jnp.float32) / c1) / \
+            (jnp.sqrt(nu_f.astype(jnp.float32) / c2) + eps)
+        step = step + rcfg.weight_decay * m * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mu_f.astype(mu.dtype), new_nu
+
+    # NOTE: a lax.map-chunked update over stacked-layer leaves was tried to
+    # shrink f32 temporaries and REGRESSED (+7 GB/chip: scan double-buffers
+    # the full xs/ys) — recorded in EXPERIMENTS.md §Perf. Whole-leaf updates
+    # fuse well under donation.
+    upd = upd_one
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = [jax.tree.map(lambda x: x, n) for n in
+               jax.tree.flatten(opt_state["nu"],
+                                is_leaf=lambda x: isinstance(x, dict)
+                                and ("full" in x or "vr" in x))[0]]
+    flat_m = jax.tree.leaves(mask)
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_mu, flat_nu, flat_m)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, metrics

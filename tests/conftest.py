@@ -1,0 +1,32 @@
+"""Test fixtures. 8 host devices (NOT 512 — that's dry-run-only; see
+launch/dryrun.py) so collective/NSM semantics can be exercised for real."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    from repro.launch.mesh import make_single_device_mesh
+    return make_single_device_mesh()
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 4)
+
+
+@pytest.fixture(scope="session")
+def mesh_pod():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 2, pod=2)
+
+
+@pytest.fixture(scope="session")
+def rcfg_small():
+    from repro.configs import RunConfig
+    return RunConfig(attn_q_block=16, attn_kv_block=16)

@@ -1,0 +1,114 @@
+"""Every NSM must implement identical collective semantics (the paper's
+contract: stacks are swappable behind the same API)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import make_engine, nk_psum, use_engine, get_nsm
+from repro.core.overlap import all_gather_matmul, matmul_reduce_scatter
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(2, 2, pod=2)
+
+
+X = jax.random.normal(jax.random.PRNGKey(0), (16, 32), jnp.float32)
+
+
+def _ref_psum(mesh, axes, spec):
+    f = lambda v: jax.lax.psum(v, axes if isinstance(axes, str) else tuple(axes))
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec))(X)
+
+
+@pytest.mark.parametrize("policy,axes,tol", [
+    ("xla", "model", 1e-6),
+    ("ring", ("pod", "data"), 1e-5),
+    ("hierarchical", ("pod", "data"), 1e-5),
+    ("compressed", ("pod", "data"), 2e-2),
+])
+def test_policy_psum_matches_native(mesh, policy, axes, tol):
+    spec = P(None, "model") if axes == "model" else P(("pod", "data"), None)
+    eng = make_engine(mesh, policy)
+    if policy == "ring":   # force even 8MB+ threshold off: add explicit rule
+        eng.clear_rules()
+        eng.add_rule("all-ring", lambda op: op.verb == "psum", "ring2")
+
+    def f(v):
+        with use_engine(eng):
+            return nk_psum(v, axes, gradient=True)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec))(X)
+    ref = _ref_psum(mesh, axes, spec)
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * float(np.abs(ref).max()))
+    assert eng.total_bytes() > 0   # ledger recorded the intent
+
+
+@pytest.mark.parametrize("name", ["ring", "ring2"])
+def test_ring_psum(mesh, name):
+    nsm = get_nsm(name)
+    f = lambda v: nsm.psum(v, ("model",), axis_sizes={"model": 2})
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(None, "model"),
+                            out_specs=P(None, "model")))(X)
+    ref = _ref_psum(mesh, "model", P(None, "model"))
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_ring_reduce_scatter(mesh):
+    nsm = get_nsm("ring")
+    f = lambda v: nsm.reduce_scatter(v, ("model",), axis_sizes={"model": 2},
+                                     axis=0)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(None, None),
+                            out_specs=P("model", None)))(X)
+    ref = jax.jit(shard_map(
+        lambda v: jax.lax.psum_scatter(v, "model", scatter_dimension=0,
+                                       tiled=True),
+        mesh=mesh, in_specs=P(None, None), out_specs=P("model", None)))(X)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_ring_all_gather(mesh):
+    nsm = get_nsm("ring")
+    f = lambda v: nsm.all_gather(v, ("model",), axis_sizes={"model": 2}, axis=0)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P("model", None),
+                            out_specs=P(None, None), check_vma=False))(X)
+    np.testing.assert_allclose(out, X, rtol=1e-6, atol=1e-6)
+
+
+def test_overlapped_all_gather_matmul(mesh):
+    K, N, M = 32, 24, 16
+    xa = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (K, N), jnp.float32)
+    f = lambda xl, wl: all_gather_matmul(xl, wl, "model", 2)
+    out = jax.jit(shard_map(f, mesh=mesh,
+                            in_specs=(P(None, None), P("model", None)),
+                            out_specs=P(None, None), check_vma=False))(xa, w)
+    np.testing.assert_allclose(out, xa @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_overlapped_matmul_reduce_scatter(mesh):
+    K, N, M = 32, 24, 16
+    xa = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (K, N), jnp.float32)
+    f = lambda xl, wl: matmul_reduce_scatter(xl, wl, "model", 2)
+    out = jax.jit(shard_map(f, mesh=mesh,
+                            in_specs=(P(None, "model"), P("model", None)),
+                            out_specs=P("model", None)))(xa, w)
+    np.testing.assert_allclose(out, xa @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_shm_nsm_elision(mesh):
+    """ShmNsm skips the wire when the engine proves compatibility."""
+    from repro.core.nqe import CommOp
+    nsm = get_nsm("shm")
+    op = CommOp(verb="psum", axes=("model",), op_data=1)   # bit0: pre-reduced
+
+    def f(v):
+        return nsm.psum(v, ("model",), axis_sizes={"model": 2}, op=op)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(None, None),
+                            out_specs=P(None, None), check_vma=False))(X)
+    np.testing.assert_allclose(out, X)   # identity move, no reduction

@@ -1,0 +1,85 @@
+"""CoreEngine: routing table, ledger accounting, token buckets."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import CoreEngine, TokenBucket, make_engine
+from repro.core.nqe import CommOp
+
+
+def _op(verb="psum", axes=("pod",), size=1 << 20, flags=0, tenant=0):
+    return CommOp(verb=verb, axes=axes, size_bytes=size, flags=flags,
+                  tenant_id=tenant)
+
+
+def test_default_routes_to_xla():
+    eng = CoreEngine()
+    assert eng.route(_op()).name == "xla"
+
+
+def test_rule_order_first_match_wins():
+    eng = CoreEngine()
+    eng.add_rule("a", lambda op: op.size_bytes > 100, "ring")
+    eng.add_rule("b", lambda op: True, "hierarchical")
+    assert eng.route(_op(size=1000)).name == "ring"
+    assert eng.route(_op(size=10)).name == "hierarchical"
+
+
+def test_unknown_nsm_rejected_eagerly():
+    eng = CoreEngine()
+    with pytest.raises(KeyError):
+        eng.add_rule("bad", lambda op: True, "does-not-exist")
+
+
+def test_ledger_accounting():
+    eng = CoreEngine()
+    for i in range(5):
+        eng.route(_op(size=100, tenant=1))
+    eng.route(_op(size=7, tenant=2))
+    table = eng.ledger_table()
+    assert (1, "psum", ("pod",), 5, 500) in table
+    assert eng.total_bytes(tenant_id=1) == 500
+    assert eng.total_bytes() == 507
+    eng.reset_ledger()
+    assert eng.total_bytes() == 0
+
+
+def test_stock_policies_route_as_documented():
+    eng = make_engine(None, "compressed")
+    assert eng.route(_op(flags=1, axes=("pod",))).name == "compressed"
+    assert eng.route(_op(flags=0, axes=("pod", "data"))).name == "hierarchical"
+    assert eng.route(_op(flags=0, axes=("model",))).name == "xla"
+    eng = make_engine(None, "ring")
+    assert eng.route(_op(size=2 << 20)).name == "ring2"
+    assert eng.route(_op(size=100)).name == "xla"
+
+
+def test_route_log_packs_nqes():
+    eng = CoreEngine()
+    eng.route(_op())
+    raw, choice = eng.route_log[0]
+    assert len(raw) == 32
+    assert CommOp.unpack(raw).verb == "psum"
+
+
+# --- token bucket -----------------------------------------------------------
+
+
+def test_token_bucket_caps_rate():
+    b = TokenBucket(rate=100.0, capacity=100.0)
+    now = 1000.0
+    assert b.consume(100, now)
+    assert not b.consume(1, now)          # empty
+    assert b.consume(50, now + 0.5)       # refilled 50
+    assert b.wait_time(100, now + 0.5) == pytest.approx(1.0)
+
+
+@given(rate=st.floats(1, 1e6), cap=st.floats(1, 1e6),
+       draws=st.lists(st.floats(0, 1e5), max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_token_bucket_never_negative_never_over_capacity(rate, cap, draws):
+    b = TokenBucket(rate, cap)
+    now = 0.0
+    for d in draws:
+        now += 0.01
+        b.consume(d, now)
+        assert -1e-6 <= b.tokens <= cap + 1e-6

@@ -1,0 +1,95 @@
+"""Per-arch smoke tests: REDUCED family-preserving configs, one forward +
+one train step on CPU, asserting shapes and no NaNs; plus prefill/decode
+parity against the train-mode forward (teacher forcing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig, get_smoke_config
+from repro.distribution.sharding import ShardingCtx
+from repro.models import (
+    build_params, forward_decode, forward_prefill, forward_train,
+)
+from repro.train.train_loop import loss_fn
+
+B, S = 2, 64
+
+
+def _cfg(name):
+    cfg = get_smoke_config(name)
+    if cfg.moe is not None:   # capacity drops are path-dependent: disable
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    return cfg
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.arange(B * S).reshape(B, S) % cfg.vocab_size,
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.ones(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_and_train_step(name, mesh1, rcfg_small):
+    cfg = _cfg(name)
+    shd = ShardingCtx(mesh1)
+    params = build_params(cfg, mesh1, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = jax.jit(
+        lambda p, b: forward_train(p, b, cfg, shd, rcfg_small))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    # one gradient step must produce finite grads for every leaf
+    g = jax.jit(jax.grad(
+        lambda p: loss_fn(p, batch, cfg, shd, rcfg_small)[0]))(params)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode_parity(name, mesh1, rcfg_small):
+    cfg = _cfg(name)
+    shd = ShardingCtx(mesh1)
+    params = build_params(cfg, mesh1, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _ = jax.jit(
+        lambda p, b: forward_train(p, b, cfg, shd, rcfg_small))(params, batch)
+    last, caches = jax.jit(
+        lambda p, t: forward_prefill(p, t, cfg, shd, rcfg_small,
+                                     max_seq=S + 8,
+                                     frames=batch.get("frames")))(
+        params, batch["tokens"])
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(logits[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    dec, caches = jax.jit(
+        lambda p, c, t, pos: forward_decode(p, c, t, pos, cfg, shd,
+                                            rcfg_small))(
+        params, caches, nxt, jnp.full((B,), S, jnp.int32))
+    ext = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    ref, _ = jax.jit(
+        lambda p, b: forward_train(p, b, cfg, shd, rcfg_small))(params, ext)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(ref[:, -1], np.float32),
+                               rtol=1e-1, atol=1e-1)
+
+
+def test_param_counts_match_analytic():
+    """Analytic num_params (used by the roofline) vs materialized params."""
+    for name in ("llama3.2-3b", "internlm2-1.8b", "mamba2-370m"):
+        cfg = get_smoke_config(name)
+        from repro.launch.mesh import make_single_device_mesh
+        mesh = make_single_device_mesh()
+        params = build_params(cfg, mesh, jax.random.PRNGKey(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.num_params()
+        # padding of heads makes materialized >= analytic; within 25%
+        assert analytic <= n * 1.05
+        assert n <= analytic * 1.3, (name, n, analytic)

@@ -1,0 +1,45 @@
+"""CommOp (NQE) wire format: 32-byte invariant + roundtrip properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nqe import AXIS_BITS, CommOp, NQE_SIZE, VERBS
+
+
+def test_nqe_is_32_bytes():
+    op = CommOp(verb="psum", axes=("pod",))
+    assert NQE_SIZE == 32
+    assert len(op.pack()) == 32
+
+
+axes_st = st.lists(st.sampled_from(sorted(AXIS_BITS)), unique=True,
+                   max_size=len(AXIS_BITS)).map(tuple)
+
+
+@given(verb=st.sampled_from(VERBS), axes=axes_st,
+       tenant=st.integers(0, 255), tag=st.integers(0, 2**32 - 1),
+       op_data=st.integers(0, 2**64 - 1), size=st.integers(0, 2**64 - 1),
+       flags=st.integers(0, 255))
+@settings(max_examples=200, deadline=None)
+def test_nqe_roundtrip(verb, axes, tenant, tag, op_data, size, flags):
+    op = CommOp(verb=verb, axes=axes, tenant_id=tenant, tag=tag,
+                op_data=op_data, size_bytes=size, flags=flags,
+                shape_desc="bf16[3,4]")
+    back = CommOp.unpack(op.pack())
+    assert back.verb == verb
+    assert set(back.axes) == set(axes)
+    assert back.tenant_id == tenant
+    assert back.tag == tag
+    assert back.op_data == op_data
+    assert back.size_bytes == size
+    assert back.flags == flags
+    assert back.matches(op)
+
+
+def test_bad_verb_rejected():
+    with pytest.raises(ValueError):
+        CommOp(verb="sendfile", axes=())
+
+
+def test_bad_tenant_rejected():
+    with pytest.raises(ValueError):
+        CommOp(verb="psum", axes=(), tenant_id=256)

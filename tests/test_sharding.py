@@ -1,0 +1,86 @@
+"""Logical-axis resolution: divisibility fallback, variants, stripping."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution.sharding import (
+    FSDP_RULES, LOGICAL_RULES, make_rules, padded_heads, resolve_dim,
+    spec_for, strip_axes_from_rules,
+)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(2, 4)
+
+
+def test_divisible_dims_shard(mesh):
+    assert spec_for((8, 16), ("batch", "ffn"), mesh) == P("data", "model")
+
+
+def test_indivisible_dims_replicate(mesh):
+    # 6 % 4 != 0 -> ffn falls back to replicated; 3 % 2 != 0 -> batch too
+    assert spec_for((3, 6), ("batch", "ffn"), mesh) == P()
+
+
+def test_axis_used_at_most_once(mesh):
+    # both dims want 'model'; second falls back
+    spec = spec_for((8, 8), ("ffn", "vocab"), mesh)
+    assert spec == P("model")
+
+
+def test_trailing_nones_trimmed(mesh):
+    assert spec_for((8, 16, 32), ("batch", None, None), mesh) == P("data")
+
+
+def test_multi_axis_candidates():
+    mesh = make_host_mesh(2, 2, pod=2)
+    assert spec_for((8, 4), ("batch", None), mesh) == P(("pod", "data"))
+    # batch=6 not divisible by pod*data=4 -> falls to data alone
+    assert spec_for((6, 4), ("batch", None), mesh) == P("data")
+
+
+def test_fsdp_variant_uses_whole_mesh(mesh):
+    rules = make_rules("fsdp")
+    assert spec_for((16, 4), ("batch", None), mesh, rules) == \
+        P(("data", "model"))
+    assert spec_for((16, 8), ("vocab", "embed"), mesh, rules) == \
+        P(None, ("data", "model"))
+
+
+def test_strip_axes():
+    stripped = strip_axes_from_rules(("pod",))
+    assert "pod" not in str(stripped["batch"])
+    assert stripped["stage"] == ()
+
+
+class _FakeMesh:
+    """Only axis sizes matter for the pure sharding math (tests run with 8
+    host devices; the production 16x16 mesh exists only in the dry-run)."""
+
+    def __init__(self, **axes):
+        import numpy as np
+        self.axis_names = tuple(axes)
+        self.devices = np.zeros(tuple(axes.values()))
+
+
+def test_padded_heads():
+    mesh = _FakeMesh(data=16, model=16)
+    assert padded_heads(24, mesh) == 32     # llama3.2-3b
+    assert padded_heads(25, mesh) == 32     # hymba
+    assert padded_heads(12, mesh) == 16     # whisper
+    assert padded_heads(56, mesh) == 64     # arctic
+    assert padded_heads(96, mesh) == 96     # nemotron divides
+
+
+def test_production_spec_resolution():
+    """The production-mesh sharding decisions, via the pure spec math."""
+    mesh = _FakeMesh(data=16, model=16)
+    # whisper's 51865 vocab is not 16-divisible -> replicated; d=768 shards
+    assert spec_for((51865, 768), ("vocab", "embed"), mesh) == P(None, "data")
+    # nemotron: everything divides
+    assert spec_for((256000, 18432), ("vocab", "embed"), mesh) == \
+        P("model", "data")
+    # deepseek experts 160 over model
+    assert spec_for((160, 5120, 1536), ("experts", "embed", None), mesh) == \
+        P("model", "data")

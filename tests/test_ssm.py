@@ -1,0 +1,74 @@
+"""SSD correctness: chunked scan vs naive recurrence; streaming decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import causal_conv, conv_step, ssd_chunked, ssd_decode_step
+
+KS = jax.random.split(jax.random.PRNGKey(2), 6)
+
+
+def _naive_ssd(xdt, dA, B, C):
+    """Token-by-token recurrence oracle: h_t = exp(dA_t) h_{t-1} + B_t xdt_t."""
+    b, l, h, p = xdt.shape
+    n = B.shape[-1]
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = []
+    for t in range(l):
+        decay = np.exp(np.asarray(dA[:, t], np.float64))[:, :, None, None]
+        upd = np.einsum("bhp,bn->bhpn", np.asarray(xdt[:, t], np.float64),
+                        np.asarray(B[:, t], np.float64))
+        state = state * decay + upd
+        ys.append(np.einsum("bhpn,bn->bhp", state,
+                            np.asarray(C[:, t], np.float64)))
+    return np.stack(ys, axis=1), state
+
+
+@pytest.mark.parametrize("l,chunk", [(64, 16), (60, 16), (32, 32), (48, 64)])
+def test_ssd_chunked_matches_recurrence(l, chunk):
+    b, h, p, n = 2, 4, 8, 16
+    xdt = jax.random.normal(KS[0], (b, l, h, p), jnp.float32) * 0.2
+    dA = -jnp.abs(jax.random.normal(KS[1], (b, l, h), jnp.float32)) * 0.2
+    B = jax.random.normal(KS[2], (b, l, n), jnp.float32) * 0.4
+    C = jax.random.normal(KS[3], (b, l, n), jnp.float32) * 0.4
+    y, st = ssd_chunked(xdt, dA, B, C, chunk)
+    y_ref, st_ref = _naive_ssd(xdt, dA, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_step_continues_the_scan():
+    """Prefill state + single decode steps == full-sequence scan."""
+    b, l, h, p, n = 1, 24, 2, 4, 8
+    xdt = jax.random.normal(KS[0], (b, l + 4, h, p), jnp.float32) * 0.2
+    dA = -jnp.abs(jax.random.normal(KS[1], (b, l + 4, h), jnp.float32)) * 0.2
+    B = jax.random.normal(KS[2], (b, l + 4, n), jnp.float32) * 0.4
+    C = jax.random.normal(KS[3], (b, l + 4, n), jnp.float32) * 0.4
+    y_full, st_full = ssd_chunked(xdt, dA, B, C, 8)
+    y_pre, st = ssd_chunked(xdt[:, :l], dA[:, :l], B[:, :l], C[:, :l], 8)
+    for t in range(l, l + 4):
+        dt_like = jnp.ones((b, h))    # dA already folded into dA[:, t]
+        # reconstruct (x*dt) and dt*A from the prepared tensors
+        y_t, st = ssd_decode_step(
+            xdt[:, t], dt_like, dA[:, t] / 1.0, B[:, t], C[:, t], st)
+        # ssd_decode_step computes exp(dt*A) with dt=1 -> exp(dA)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_causal_conv_streaming_equivalence():
+    b, l, c, w = 2, 10, 6, 4
+    u = jax.random.normal(KS[4], (b, l, c), jnp.float32)
+    wgt = jax.random.normal(KS[5], (w, c), jnp.float32)
+    y_full = causal_conv(u, wgt)
+    state = jnp.zeros((b, w - 1, c))
+    outs = []
+    for t in range(l):
+        y_t, state = conv_step(u[:, t], state, wgt)
+        outs.append(y_t)
+    y_stream = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_full),
+                               rtol=1e-5, atol=1e-5)
