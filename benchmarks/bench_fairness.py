@@ -1,0 +1,121 @@
+"""Paper Figs. 21/22 analog: fair bandwidth sharing on a shared bottleneck.
+
+Three scenarios, all on the virtual-time harness (deterministic, sub-second):
+
+  convergence   N tenants with unequal demands on one bottleneck, enforced
+                by two CoreEngines (the distributed case). Claim (a):
+                steady-state per-tenant throughput within 10% of the
+                weighted max-min fair allocation.
+  isolation     one tenant misbehaves (offers 10x the bottleneck). Claim
+                (b): every other tenant's served rate degrades < 5% vs its
+                isolated baseline (paper Fig. 22: per-VM isolation).
+  backfill      a tenant goes idle mid-run. Claim (c): the freed share is
+                re-absorbed by backlogged tenants (work conservation) and
+                returned when the tenant comes back.
+
+Run: PYTHONPATH=src python benchmarks/bench_fairness.py
+Exit status 1 if any claim fails.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+from typing import Dict
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.control import SharedBottleneckSim, SimTenant  # noqa: E402
+
+CAPACITY = 1_000_000.0      # bottleneck bytes/s
+DT = 0.05
+T_RUN = 12.0
+
+
+def run_convergence() -> Dict:
+    """3 unequal tenants + 2 engines: converge to weighted max-min fair."""
+    tenants = [
+        SimTenant(1, demand=0.15 * CAPACITY),            # satisfied
+        SimTenant(2, demand=0.90 * CAPACITY),            # greedy
+        SimTenant(3, demand=2.00 * CAPACITY),            # greedier
+    ]
+    sim = SharedBottleneckSim(tenants, CAPACITY, n_engines=2, dt=DT)
+    res = sim.run(T_RUN)
+    ref = sim.fair_reference()
+    rows, worst = [], 0.0
+    for t in sorted(ref):
+        got = res.served_rate(t)
+        err = abs(got - ref[t]) / ref[t]
+        worst = max(worst, err)
+        rows.append((f"convergence,tenant{t}_served_frac_of_fair",
+                     got / ref[t]))
+    rows.append(("convergence,max_rel_error", worst))
+    rows.append(("convergence,utilization",
+                 res.total_served_rate() / CAPACITY))
+    return {"rows": rows, "ok": worst < 0.10,
+            "claim": f"max deviation from max-min fair {worst:.1%} < 10%"}
+
+
+def run_isolation() -> Dict:
+    """A 10x-overloading tenant must not hurt in-budget tenants (>5%)."""
+    normal = {1: 0.20 * CAPACITY, 2: 0.25 * CAPACITY, 3: 0.15 * CAPACITY}
+    # isolated baselines: each normal tenant alone on the bottleneck
+    base = {}
+    for t, d in normal.items():
+        sim = SharedBottleneckSim([SimTenant(t, d)], CAPACITY, dt=DT)
+        base[t] = sim.run(T_RUN).served_rate(t)
+    # shared run with the misbehaving tenant offering 10x capacity
+    tenants = [SimTenant(t, d) for t, d in normal.items()]
+    tenants.append(SimTenant(9, demand=10.0 * CAPACITY))
+    sim = SharedBottleneckSim(tenants, CAPACITY, dt=DT)
+    res = sim.run(T_RUN)
+    rows, worst = [], 0.0
+    for t in normal:
+        degr = max(1.0 - res.served_rate(t) / base[t], 0.0)
+        worst = max(worst, degr)
+        rows.append((f"isolation,tenant{t}_degradation", degr))
+    rows.append(("isolation,hog_served_frac_of_capacity",
+                 res.served_rate(9) / CAPACITY))
+    rows.append(("isolation,max_degradation", worst))
+    return {"rows": rows, "ok": worst < 0.05,
+            "claim": f"worst in-budget degradation {worst:.2%} < 5%"}
+
+
+def run_backfill() -> Dict:
+    """Idle tenant's share is re-absorbed, then returned when it's back."""
+    def on_off(t):
+        return 0.8 * CAPACITY if t < 4.0 or t >= 8.0 else 0.0
+
+    tenants = [SimTenant(1, on_off), SimTenant(2, 2.0 * CAPACITY)]
+    sim = SharedBottleneckSim(tenants, CAPACITY, dt=DT)
+    sim.run(4.0)
+    mid = sim.run(4.0)                      # tenant 1 idle
+    back = sim.run(4.0)                     # tenant 1 returns
+    absorbed = mid.served_rate(2, 0.4, 1.0) / CAPACITY
+    returned = back.served_rate(1, 0.5, 1.0) / (0.5 * CAPACITY)
+    rows = [("backfill,idle_phase_utilization_by_survivor", absorbed),
+            ("backfill,returning_tenant_frac_of_fair", returned)]
+    ok = absorbed > 0.90 and abs(returned - 1.0) < 0.15
+    return {"rows": rows, "ok": ok,
+            "claim": f"survivor absorbed {absorbed:.0%} of capacity; "
+                     f"returning tenant at {returned:.0%} of fair share"}
+
+
+ALL = (run_convergence, run_isolation, run_backfill)
+
+
+def main() -> None:
+    print("name,value")
+    failures = 0
+    for bench in ALL:
+        out = bench()
+        for name, value in out["rows"]:
+            print(f"{name},{value:.4f}")
+        status = "PASS" if out["ok"] else "FAIL"
+        print(f"{bench.__name__},{status}: {out['claim']}", file=sys.stderr)
+        failures += 0 if out["ok"] else 1
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

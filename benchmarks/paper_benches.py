@@ -201,7 +201,7 @@ def bench_latency() -> List[Row]:
 def bench_overhead() -> List[Row]:
     """nk_psum routed through CoreEngine vs raw lax.psum: identical compiled
     artifact (trace-time-only indirection) + dispatch overhead."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import make_engine, nk_psum, use_engine
     from repro.launch.mesh import make_host_mesh
@@ -228,7 +228,7 @@ def bench_overhead() -> List[Row]:
 
 def bench_scalability() -> List[Row]:
     """Collective throughput scaling with device count (host devices)."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_host_mesh
     rows = []

@@ -1,0 +1,55 @@
+"""Distributed congestion control & fair bandwidth sharing — use case 2.
+
+    PYTHONPATH=src python examples/fair_sharing.py
+
+The management plane closing the loop (paper Figs. 21-22): two CoreEngines
+(think: two hosts) share one 1 MB/s cross-pod fabric. Four tenants offer
+very different loads — one tiny, two greedy, one outright misbehaving (10x
+the fabric). A RateController watches the engines' ledgers, runs weighted
+max-min fair water-filling every interval, and pushes per-tenant rates back
+into the engines' token buckets, which dispatch() now actually enforces.
+
+No model code anywhere: tenants are CommOp streams, enforcement is
+engine-side — exactly the "stack as infrastructure" pitch.
+"""
+from repro.control import RateController, SharedBottleneckSim, SimTenant
+from repro.serve import bursty_trace, fair_replay
+
+MB = 1_000_000.0
+CAPACITY = 1.0 * MB
+
+tenants = [
+    SimTenant(1, demand=0.10 * CAPACITY, weight=1.0),   # small, satisfied
+    SimTenant(2, demand=0.80 * CAPACITY, weight=1.0),   # greedy
+    SimTenant(3, demand=0.80 * CAPACITY, weight=2.0),   # greedy, 2x weight
+    SimTenant(9, demand=10.0 * CAPACITY, weight=1.0),   # misbehaving
+]
+sim = SharedBottleneckSim(tenants, CAPACITY, n_engines=2, dt=0.05)
+res = sim.run(12.0)
+ref = sim.fair_reference()
+
+print(f"shared fabric: {CAPACITY/MB:.1f} MB/s across 2 engines\n")
+print("tenant  weight  offered(MB/s)  served(MB/s)  max-min fair")
+for t in sorted(ref):
+    tn = next(x for x in tenants if x.tenant_id == t)
+    print(f"  {t}     {tn.weight:4.1f}    {tn.offered_at(12.0)/MB:10.2f}"
+          f"    {res.served_rate(t)/MB:10.2f}    {ref[t]/MB:9.2f}")
+print(f"\nfabric utilization: {res.total_served_rate()/CAPACITY:.0%}; "
+      f"the 10x hog was held to {res.served_rate(9)/CAPACITY:.0%} "
+      f"of capacity, tenant 1's trickle untouched")
+
+ctrl: RateController = sim.controller
+print(f"controller: {ctrl.ticks} ticks; pushed rates land in live "
+      f"token buckets (balances preserved across updates)")
+print("\nexported counters (excerpt):")
+for line in ctrl.export_prometheus().splitlines():
+    if "allocated" in line:
+        print("  " + line)
+
+# the same allocator, replayed over the bursty fleet trace of use case 1:
+t = bursty_trace(8, seed=1)
+out = fair_replay(t, capacity=float(t.loads.sum(axis=0).mean()) * 0.7)
+print(f"\nfair replay over 8 bursty tenants at 70% of mean aggregate load:"
+      f"\n  served {out['served_frac']:.0%} of offered demand,"
+      f" Jain index among backlogged tenants "
+      f"{out['jain_backlogged']:.3f} (1.0 = perfectly fair)")

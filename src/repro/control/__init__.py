@@ -1,0 +1,24 @@
+"""repro.control — the NetKernel management plane.
+
+Once the network stack is part of the infrastructure (CoreEngine meters
+every CommOp, token buckets shape every tenant), the operator can close the
+loop: observe per-tenant rates, run a congestion-control policy over a
+shared bottleneck, and push allocations back into the dataplane — the
+paper's use case 2 (distributed congestion control / fair bandwidth
+sharing, Figs. 21-22) as a subsystem.
+"""
+from repro.control.congestion import (
+    Aimd, CongestionControl, Dctcp, WaterFill, max_min_fair,
+)
+from repro.control.controller import RateController
+from repro.control.sim import SharedBottleneckSim, SimResult, SimTenant
+from repro.control.telemetry import (
+    EngineTelemetry, SchedulerTelemetry, TenantObs, merge_obs,
+)
+
+__all__ = [
+    "Aimd", "CongestionControl", "Dctcp", "WaterFill", "max_min_fair",
+    "RateController",
+    "SharedBottleneckSim", "SimResult", "SimTenant",
+    "EngineTelemetry", "SchedulerTelemetry", "TenantObs", "merge_obs",
+]

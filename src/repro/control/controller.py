@@ -1,0 +1,131 @@
+"""RateController: the closed loop from observed traffic to enforced rates.
+
+One controller owns one shared bottleneck (capacity in units/s) and any
+number of enforcement points that draw from it:
+
+  * CoreEngines (possibly several — the distributed case: engines on
+    different hosts whose tenants share one cross-pod fabric). Per tick the
+    controller merges per-engine telemetry, runs the congestion-control
+    algorithm on the merged view, then splits each tenant's global
+    allocation across engines in proportion to where that tenant's traffic
+    actually showed up (with a small probe floor so an idle engine can
+    discover demand).
+  * TenantSchedulers (serving bottleneck in tokens/s): allocations are
+    split the same way and pushed into the schedulers' admission buckets
+    mid-run, preserving each bucket's capacity (requests admit whole).
+
+Rates are pushed with ``update_tenant_rate``/``set_rate`` so live token
+balances survive the update — a controller tick must not reopen a fresh
+burst for a tenant it is trying to throttle.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.control.congestion import CongestionControl, WaterFill
+from repro.control.telemetry import (
+    EngineTelemetry, SchedulerTelemetry, TenantObs, merge_obs,
+)
+
+_PROBE_FRAC = 0.02     # idle-enforcement-point floor, fraction of allocation
+
+
+class RateController:
+    """Distributed congestion control for one shared bottleneck."""
+
+    def __init__(self, capacity: float,
+                 algo: Optional[CongestionControl] = None,
+                 weights: Optional[Dict[int, float]] = None,
+                 alpha: float = 0.5, burst_s: float = 0.25):
+        self.capacity = float(capacity)
+        self.algo = algo if algo is not None else WaterFill(weights)
+        self.alpha = alpha
+        self.burst_s = burst_s
+        self._engines: List[Tuple[object, EngineTelemetry]] = []
+        self._schedulers: List[Tuple[object, SchedulerTelemetry]] = []
+        self.allocations: Dict[int, float] = {}
+        self.history: List[Dict[int, float]] = []
+        self.ticks = 0
+
+    # -- wiring -------------------------------------------------------------
+    def attach_engine(self, engine, axes: Optional[Iterable[str]] = None):
+        self._engines.append(
+            (engine, EngineTelemetry(engine, self.alpha, axes)))
+        return self
+
+    def attach_scheduler(self, scheduler):
+        self._schedulers.append(
+            (scheduler, SchedulerTelemetry(scheduler, self.alpha)))
+        return self
+
+    # -- observation --------------------------------------------------------
+    def observe(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        per_source = [tel.update(now) for _, tel in self._engines]
+        per_source += [tel.update(now) for _, tel in self._schedulers]
+        return merge_obs(per_source)
+
+    # -- the loop body ------------------------------------------------------
+    def tick(self, now: Optional[float] = None) -> Dict[int, float]:
+        now = time.monotonic() if now is None else now
+        merged = self.observe(now)
+        if not merged or not any(o.offered > 0 or o.queue > 0
+                                 for o in merged.values()):
+            # no rate signal yet (first tick only baselines the counters):
+            # pushing allocations computed from zeros would stall everyone
+            return {}
+        self.allocations = self.algo.allocate(merged, self.capacity)
+        self._push(now)
+        self.history.append(dict(self.allocations))
+        self.ticks += 1
+        return self.allocations
+
+    def _push(self, now: float) -> None:
+        for tenant, rate in self.allocations.items():
+            burst = max(rate * self.burst_s, 1.0)
+            for (engine, _tel), share in zip(
+                    self._engines, self._shares(tenant, self._engines)):
+                engine.update_tenant_rate(tenant, rate * share,
+                                          burst * share, now)
+            # schedulers keep their bucket capacity: requests are admitted
+            # whole, so shrinking burst below one request's token cost would
+            # head-of-line-block the queue forever
+            for (scheduler, _tel), share in zip(
+                    self._schedulers, self._shares(tenant, self._schedulers)):
+                scheduler.set_rate(tenant, rate * share, None, now)
+
+    @staticmethod
+    def _shares(tenant: int, points) -> List[float]:
+        """Split one tenant's allocation across enforcement points in
+        proportion to where its demand showed up (offered rate + queue)."""
+        n = len(points)
+        if n == 0:
+            return []
+        demand = [tel.obs.get(tenant, TenantObs()).offered
+                  + tel.obs.get(tenant, TenantObs()).queue
+                  for _, tel in points]
+        total = sum(demand)
+        if total <= 1e-12:
+            return [1.0 / n] * n
+        # probe floor: a point this tenant is quiet on still gets a sliver
+        # so demand arriving there is admitted and becomes visible next tick
+        floor = _PROBE_FRAC / n
+        raw = [max(d / total, floor) for d in demand]
+        norm = sum(raw)
+        return [r / norm for r in raw]
+
+    # -- reporting ----------------------------------------------------------
+    def counters(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"controller_ticks_total": self.ticks,
+                                 "controller_capacity": self.capacity}
+        for t, r in sorted(self.allocations.items()):
+            out[f'nk_allocated_rate{{tenant="{t}"}}'] = r
+        for _, tel in self._engines + self._schedulers:
+            for k, v in tel.counters().items():
+                # labeled totals end in '}', so match on the metric name
+                out[k] = out.get(k, 0) + v if "_total" in k else v
+        return out
+
+    def export_prometheus(self) -> str:
+        return "\n".join(f"{name} {value:.6g}"
+                         for name, value in self.counters().items()) + "\n"

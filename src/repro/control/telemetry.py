@@ -1,0 +1,200 @@
+"""Telemetry: CoreEngine/TenantScheduler counters -> per-tenant rate signals.
+
+The management plane's eyes. A CoreEngine already meters every CommOp in its
+ledger (offered bytes) and — with enforcement on — the over-rate shortfall in
+``deferred``. This module turns successive snapshots of those cumulative
+counters into EWMA-smoothed per-(tenant, axis) rates:
+
+    served   = offered - deferred        (bytes/s actually admitted in-rate)
+    deferred > 0                         (the tenant is backlogged: it wants
+                                          more than its current allocation)
+
+which is exactly the observation a congestion-control algorithm needs. The
+same interface wraps a TenantScheduler (served decode tokens + queue depth)
+so one controller implementation manages both the collective-bytes and the
+serving-tokens bottlenecks.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclass
+class TenantObs:
+    """One control interval's view of one tenant (units/s; units = bytes
+    for engine bottlenecks, tokens for serving bottlenecks)."""
+
+    rate: float = 0.0        # served (in-allocation) rate
+    offered: float = 0.0     # served + deferred: what the tenant asked for
+    deferred: float = 0.0    # over-allocation shortfall rate
+    queue: float = 0.0       # instantaneous queue depth (units)
+
+    @property
+    def backlogged(self) -> bool:
+        return self.deferred > 1e-9 or self.queue > 1e-9
+
+    def merge(self, other: "TenantObs") -> "TenantObs":
+        return TenantObs(rate=self.rate + other.rate,
+                         offered=self.offered + other.offered,
+                         deferred=self.deferred + other.deferred,
+                         queue=self.queue + other.queue)
+
+
+class _Ewma:
+    def __init__(self, alpha: float):
+        self.alpha = alpha
+        self.value: Optional[float] = None
+
+    def update(self, sample: float) -> float:
+        if self.value is None:
+            self.value = float(sample)
+        else:
+            self.value = self.alpha * float(sample) \
+                + (1.0 - self.alpha) * self.value
+        return self.value
+
+
+class EngineTelemetry:
+    """EWMA per-(tenant, axes) rate estimates from one CoreEngine's ledger.
+
+    ``axes_filter`` restricts accounting to CommOps whose axes intersect the
+    bottleneck's axes (None = count everything), so one engine can feed
+    several controllers, each watching its own shared resource.
+    """
+
+    def __init__(self, engine, alpha: float = 0.5,
+                 axes_filter: Optional[Iterable[str]] = None):
+        self.engine = engine
+        self.alpha = alpha
+        self.axes_filter = None if axes_filter is None else set(axes_filter)
+        self._prev_offered: Dict[int, int] = {}
+        self._prev_deferred: Dict[int, int] = {}
+        self._prev_t: Optional[float] = None
+        self._offered_ewma: Dict[int, _Ewma] = {}
+        self._deferred_ewma: Dict[int, _Ewma] = {}
+        self.obs: Dict[int, TenantObs] = {}
+        self.updates = 0
+
+    def _axes_match(self, axes: Tuple[str, ...]) -> bool:
+        if self.axes_filter is None:
+            return True
+        return not self.axes_filter.isdisjoint(axes) or not axes
+
+    def _cumulative(self) -> Tuple[Dict[int, int], Dict[int, int]]:
+        ledger, deferred_raw = self.engine.snapshot()
+        offered: Dict[int, int] = {}
+        deferred: Dict[int, int] = {}
+        for (t, _verb, axes), (_ops, nbytes) in ledger.items():
+            if self._axes_match(axes):
+                offered[t] = offered.get(t, 0) + nbytes
+        for (t, axes), (_ops, nbytes) in deferred_raw.items():
+            if self._axes_match(axes):
+                deferred[t] = deferred.get(t, 0) + nbytes
+        return offered, deferred
+
+    def update(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        now = time.monotonic() if now is None else now
+        offered, deferred = self._cumulative()
+        if self._prev_t is None or now <= self._prev_t:
+            # first sample (or time stood still): establish the baseline
+            self._prev_offered, self._prev_deferred = offered, deferred
+            self._prev_t = now
+            self.obs = {t: TenantObs() for t in offered}
+            return self.obs
+        dt = now - self._prev_t
+        self.obs = {}
+        for t in set(offered) | set(self._prev_offered):
+            d_off = (offered.get(t, 0) - self._prev_offered.get(t, 0)) / dt
+            d_def = (deferred.get(t, 0) - self._prev_deferred.get(t, 0)) / dt
+            off = self._offered_ewma.setdefault(t, _Ewma(self.alpha)) \
+                .update(d_off)
+            dfr = self._deferred_ewma.setdefault(t, _Ewma(self.alpha)) \
+                .update(d_def)
+            dfr = min(dfr, off)
+            self.obs[t] = TenantObs(rate=max(off - dfr, 0.0), offered=off,
+                                    deferred=dfr)
+        self._prev_offered, self._prev_deferred = offered, deferred
+        self._prev_t = now
+        self.updates += 1
+        return self.obs
+
+    # -- exportable counters ------------------------------------------------
+    def counters(self) -> Dict[str, float]:
+        ledger, deferred = self.engine.snapshot()
+        out: Dict[str, float] = {"telemetry_updates_total": self.updates}
+        for (t, _verb, axes), (_ops, nbytes) in sorted(ledger.items()):
+            if self._axes_match(axes):
+                key = f'tenant="{t}",axes="{"+".join(axes) or "none"}"'
+                out[f"nk_offered_bytes_total{{{key}}}"] = \
+                    out.get(f"nk_offered_bytes_total{{{key}}}", 0) + nbytes
+        for (t, axes), (_ops, nbytes) in sorted(deferred.items()):
+            if self._axes_match(axes):
+                key = f'tenant="{t}",axes="{"+".join(axes) or "none"}"'
+                out[f"nk_deferred_bytes_total{{{key}}}"] = \
+                    out.get(f"nk_deferred_bytes_total{{{key}}}", 0) + nbytes
+        for t, o in sorted(self.obs.items()):
+            out[f'nk_served_bytes_per_s{{tenant="{t}"}}'] = o.rate
+        return out
+
+    def export_prometheus(self) -> str:
+        return "\n".join(f"{name} {value:.6g}"
+                         for name, value in self.counters().items()) + "\n"
+
+
+class SchedulerTelemetry:
+    """Same interface over a TenantScheduler: served tokens/s + queue depth."""
+
+    def __init__(self, scheduler, alpha: float = 0.5):
+        self.scheduler = scheduler
+        self.alpha = alpha
+        self._prev_served: Dict[int, int] = {}
+        self._prev_t: Optional[float] = None
+        self._ewma: Dict[int, _Ewma] = {}
+        self.obs: Dict[int, TenantObs] = {}
+        self.updates = 0
+
+    def update(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        now = time.monotonic() if now is None else now
+        served = dict(self.scheduler.served_tokens)
+        queues = {t: float(self.scheduler.pending(t))
+                  for t in self.scheduler.queues}
+        if self._prev_t is None or now <= self._prev_t:
+            self._prev_served, self._prev_t = served, now
+            self.obs = {t: TenantObs(queue=queues.get(t, 0.0))
+                        for t in set(served) | set(queues)}
+            return self.obs
+        dt = now - self._prev_t
+        self.obs = {}
+        for t in set(served) | set(self._prev_served) | set(queues):
+            d = (served.get(t, 0) - self._prev_served.get(t, 0)) / dt
+            r = self._ewma.setdefault(t, _Ewma(self.alpha)).update(d)
+            q = queues.get(t, 0.0)
+            self.obs[t] = TenantObs(rate=r, offered=r, queue=q)
+        self._prev_served, self._prev_t = served, now
+        self.updates += 1
+        return self.obs
+
+    def counters(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"telemetry_updates_total": self.updates}
+        for t, n in sorted(self.scheduler.served_tokens.items()):
+            out[f'nk_served_tokens_total{{tenant="{t}"}}'] = n
+        for t, o in sorted(self.obs.items()):
+            out[f'nk_served_tokens_per_s{{tenant="{t}"}}'] = o.rate
+            out[f'nk_queue_depth{{tenant="{t}"}}'] = o.queue
+        return out
+
+    def export_prometheus(self) -> str:
+        return "\n".join(f"{name} {value:.6g}"
+                         for name, value in self.counters().items()) + "\n"
+
+
+def merge_obs(per_source: List[Dict[int, TenantObs]]) -> Dict[int, TenantObs]:
+    """Sum observations across sources (the distributed case: one tenant's
+    traffic through several engines sharing the bottleneck)."""
+    out: Dict[int, TenantObs] = {}
+    for obs in per_source:
+        for t, o in obs.items():
+            out[t] = out[t].merge(o) if t in out else o
+    return out

@@ -17,6 +17,7 @@ basic fairness, and can rate-limit a VM in bytes/s or NQEs/s. Here:
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import defaultdict
@@ -63,25 +64,64 @@ class TokenBucket:
             return True
         return False
 
+    def drain(self, n: float, now: Optional[float] = None) -> float:
+        """Fluid admission: take up to ``n`` tokens, never going negative.
+
+        Returns the amount actually admitted. CoreEngine enforcement uses
+        this (a collective's bytes are a divisible stream, unlike a request,
+        which is admitted whole or not at all via ``consume``).
+        """
+        now = time.monotonic() if now is None else now
+        self._refill(now)
+        take = min(float(n), max(self.tokens, 0.0))
+        self.tokens -= take
+        return take
+
     def wait_time(self, n: float, now: Optional[float] = None) -> float:
         now = time.monotonic() if now is None else now
         self._refill(now)
         if self.tokens >= n:
             return 0.0
+        if self.rate <= 0.0:
+            return math.inf          # hard-blocked tenant: never admissible
         return (n - self.tokens) / self.rate
+
+    def set_rate(self, rate: float, burst: Optional[float] = None,
+                 now: Optional[float] = None) -> None:
+        """Retarget the bucket mid-run, preserving accumulated tokens.
+
+        Settles the balance at the old rate first so a controller pushing
+        updates does not retroactively re-price the elapsed interval.
+        """
+        now = time.monotonic() if now is None else now
+        self._refill(now)
+        self.rate = float(rate)
+        if burst is not None:
+            self.capacity = float(burst)
+            self.tokens = min(self.tokens, self.capacity)
+
+
+ENFORCEMENT_MODES = ("off", "account", "defer")
 
 
 class CoreEngine:
     """Routes CommOps to NSMs; accounts and isolates tenants."""
 
-    def __init__(self, mesh=None, default_nsm: str = "xla"):
+    def __init__(self, mesh=None, default_nsm: str = "xla",
+                 enforcement: str = "off"):
         self.mesh = mesh
         self.default_nsm = default_nsm
         self.rules: List[Rule] = []
         self.ledger: Dict[Tuple[int, str, Tuple[str, ...]], LedgerEntry] = \
             defaultdict(LedgerEntry)
+        # bytes/ops that arrived beyond the tenant's rate (shortfall only)
+        self.deferred: Dict[Tuple[int, Tuple[str, ...]], LedgerEntry] = \
+            defaultdict(LedgerEntry)
         self.route_log: List[Tuple[bytes, str]] = []
+        self.throttle_log: List[Tuple[int, float, float]] = []
         self.buckets: Dict[int, TokenBucket] = {}
+        self.set_enforcement(enforcement)
+        self.max_defer_s = 0.05      # wall-clock cap per deferred dispatch
         self._lock = threading.Lock()
 
     # --- connection-table management ------------------------------------
@@ -97,6 +137,52 @@ class CoreEngine:
                         burst: Optional[float] = None) -> None:
         self.buckets[tenant_id] = TokenBucket(
             bytes_per_s, burst if burst is not None else bytes_per_s)
+
+    def update_tenant_rate(self, tenant_id: int, bytes_per_s: float,
+                           burst: Optional[float] = None,
+                           now: Optional[float] = None) -> None:
+        """Controller push: retarget a live bucket without dropping its
+        token balance (``set_tenant_rate`` would reopen the full burst)."""
+        b = self.buckets.get(tenant_id)
+        if b is None:
+            self.set_tenant_rate(tenant_id, bytes_per_s, burst)
+            if now is not None:
+                self.buckets[tenant_id].updated = now
+        else:
+            b.set_rate(bytes_per_s, burst, now)
+
+    def set_enforcement(self, mode: str) -> None:
+        """off: buckets are advisory (seed behaviour). account: admit
+        everything but meter the over-rate excess. defer: additionally
+        sleep (bounded) so wall-clock dispatch rates are actually shaped."""
+        if mode not in ENFORCEMENT_MODES:
+            raise ValueError(f"enforcement must be one of {ENFORCEMENT_MODES}")
+        self.enforcement = mode
+
+    def admit(self, op: CommOp, now: Optional[float] = None) -> float:
+        """Consume the tenant's bucket for this op; returns the shaping
+        delay in seconds (0.0 = admitted entirely within rate).
+
+        The op's bytes are drained from the bucket as a fluid; any shortfall
+        is metered in ``deferred`` + ``throttle_log`` and, in ``defer`` mode
+        with a real clock, slept off (capped at ``max_defer_s``).
+        """
+        b = self.buckets.get(op.tenant_id)
+        if b is None or self.enforcement == "off":
+            return 0.0
+        admitted = b.drain(op.size_bytes, now)
+        shortfall = float(op.size_bytes) - admitted
+        if shortfall <= 0.0:
+            return 0.0
+        wait = math.inf if b.rate <= 0.0 else shortfall / b.rate
+        with self._lock:
+            e = self.deferred[(op.tenant_id, op.axes)]
+            e.ops += 1
+            e.bytes += int(shortfall)
+            self.throttle_log.append((op.tenant_id, shortfall, wait))
+        if self.enforcement == "defer" and now is None:
+            time.sleep(min(wait, self.max_defer_s))
+        return wait
 
     # --- routing ---------------------------------------------------------
     def route(self, op: CommOp) -> Nsm:
@@ -123,10 +209,11 @@ class CoreEngine:
         return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
 
     def dispatch(self, verb: str, x, axes: Tuple[str, ...], *, tenant_id=0,
-                 tag=0, flags=0, op_data=0, **kw):
+                 tag=0, flags=0, op_data=0, now=None, **kw):
         op = CommOp(verb=verb, axes=tuple(axes), tenant_id=tenant_id, tag=tag,
                     flags=flags, op_data=op_data, size_bytes=payload_bytes(x),
                     shape_desc=describe(x))
+        self.admit(op, now)
         nsm = self.route(op)
         fn = getattr(nsm, "psum" if verb == "psum" else verb, None)
         if verb == "shm_move":
@@ -147,10 +234,24 @@ class CoreEngine:
             return sum(e.bytes for (t, _, _), e in self.ledger.items()
                        if tenant_id is None or t == tenant_id)
 
+    def snapshot(self) -> Tuple[Dict, Dict]:
+        """Consistent copy of (ledger, deferred) counters under the lock —
+        the telemetry read path (iterating the live dicts races dispatch)."""
+        with self._lock:
+            return ({k: (e.ops, e.bytes) for k, e in self.ledger.items()},
+                    {k: (e.ops, e.bytes) for k, e in self.deferred.items()})
+
+    def deferred_bytes(self, tenant_id: Optional[int] = None) -> int:
+        with self._lock:
+            return sum(e.bytes for (t, _), e in self.deferred.items()
+                       if tenant_id is None or t == tenant_id)
+
     def reset_ledger(self) -> None:
         with self._lock:
             self.ledger.clear()
+            self.deferred.clear()
             self.route_log.clear()
+            self.throttle_log.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_forward(stage_params, x, stage_fn: Callable, *, mesh,
                      n_micro: int, axis: str = "pod"):
@@ -71,7 +73,7 @@ def pipeline_forward(stage_params, x, stage_fn: Callable, *, mesh,
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    y = jax.shard_map(local, mesh=mesh,
-                      in_specs=(pspec, P()), out_specs=P(),
-                      axis_names={axis}, check_vma=False)(stage_params, mb)
+    y = shard_map(local, mesh=mesh,
+                  in_specs=(pspec, P()), out_specs=P(),
+                  axis_names={axis}, check_vma=False)(stage_params, mb)
     return y.reshape((b,) + x.shape[1:])

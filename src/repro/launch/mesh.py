@@ -7,11 +7,11 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def _make(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

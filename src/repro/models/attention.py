@@ -307,7 +307,8 @@ def decode_attention_cp(q, k_c, v_c, pos, *, kv_map, window, n_real_heads,
         return (o / jnp.maximum(wsum, 1e-30)[..., None]).astype(qf.dtype)
 
     from jax.sharding import PartitionSpec as P
-    o = jax.shard_map(
+    from repro.compat import shard_map
+    o = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, "model"), P(None, "model"), P()),
         out_specs=P(), axis_names={"model"}, check_vma=False,

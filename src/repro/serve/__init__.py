@@ -1,10 +1,12 @@
 from repro.serve.engine import ServeEngine, Slot
 from repro.serve.multiplex import (
-    Trace, bursty_trace, chip_accounting, paper_table2_analog,
+    Trace, bursty_trace, chip_accounting, fair_replay, jain_index,
+    paper_table2_analog,
 )
 from repro.serve.scheduler import Request, TenantScheduler
 
 __all__ = [
     "ServeEngine", "Slot", "Trace", "bursty_trace", "chip_accounting",
-    "paper_table2_analog", "Request", "TenantScheduler",
+    "fair_replay", "jain_index", "paper_table2_analog", "Request",
+    "TenantScheduler",
 ]

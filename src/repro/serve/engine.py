@@ -39,11 +39,17 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, rcfg: RunConfig, mesh, params=None,
                  *, batch_slots: int = 8, max_seq: int = 256,
-                 scheduler: Optional[TenantScheduler] = None, key=None):
+                 scheduler: Optional[TenantScheduler] = None, key=None,
+                 controller=None, control_every: int = 4):
         self.cfg, self.rcfg, self.mesh = cfg, rcfg, mesh
         self.B, self.max_seq = batch_slots, max_seq
         self.shd = ShardingCtx(mesh)
         self.scheduler = scheduler or TenantScheduler()
+        # management plane: anything with tick(now) — typically a
+        # repro.control.RateController attached to self.scheduler. Rates it
+        # pushes take effect on the very next admission decision.
+        self.controller = controller
+        self.control_every = max(int(control_every), 1)
         self.params = params if params is not None else init_params(
             model_schema(cfg, mesh), key or jax.random.PRNGKey(0))
         self.slots = [Slot() for _ in range(batch_slots)]
@@ -103,6 +109,11 @@ class ServeEngine:
     def step(self, now=None) -> int:
         """Admit + one decode step for all active slots. Returns #active."""
         t0 = time.monotonic()
+        self.steps += 1
+        # tick before admission (and before the no-work early return): a
+        # fully-throttled engine must still get rate updates or it livelocks
+        if self.controller is not None and self.steps % self.control_every == 0:
+            self.controller.tick(time.monotonic() if now is None else now)
         self._admit(now)
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:

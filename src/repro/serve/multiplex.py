@@ -16,9 +16,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.control.congestion import max_min_fair
 
 
 @dataclass
@@ -73,3 +75,64 @@ def paper_table2_analog(n_tenants: int = 16, seed: int = 0,
     """The fleet-level claim: >40% savings at equal served load."""
     t = bursty_trace(n_tenants, seed=seed)
     return chip_accounting(t, cap_per_chip)
+
+
+# ---------------------------------------------------------------------------
+# Fairness-aware replay (management-plane view of the shared engine)
+# ---------------------------------------------------------------------------
+
+
+def jain_index(xs: Sequence[float]) -> float:
+    """Jain's fairness index: 1.0 = perfectly equal, 1/n = one hog."""
+    xs = [float(x) for x in xs]
+    n = len(xs)
+    sq = sum(x * x for x in xs)
+    if n == 0 or sq <= 0:
+        return 1.0
+    return sum(xs) ** 2 / (n * sq)
+
+
+def fair_replay(trace: Trace, capacity: float,
+                weights: Optional[Dict[int, float]] = None,
+                rate_caps: Optional[Dict[int, float]] = None,
+                interval_s: float = 1.0) -> Dict:
+    """Replay a load trace through a weighted max-min fair shared engine.
+
+    Fluid-flow model of what the RateController enforces on a real
+    deployment: per interval, each tenant demands its offered load plus any
+    backlog carried from earlier intervals; the bottleneck ``capacity``
+    (requests/s) is divided weighted-max-min-fair; unserved demand queues.
+    ``rate_caps`` bounds individual tenants (Fig. 21 hard caps) — capacity a
+    capped tenant cannot use is re-filled to the others (work conservation).
+    """
+    loads = trace.loads
+    n, T = loads.shape
+    served = np.zeros((n, T))
+    backlog = np.zeros(n)
+    backlogged_jain: List[float] = []
+    for t in range(T):
+        demand = {i: loads[i, t] * interval_s + backlog[i] for i in range(n)}
+        if rate_caps:
+            demand = {i: min(d, rate_caps.get(i, math.inf) * interval_s)
+                      for i, d in demand.items()}
+        alloc = max_min_fair(capacity * interval_s, demand, weights)
+        for i in range(n):
+            served[i, t] = alloc[i] / interval_s
+            backlog[i] = max(backlog[i] + loads[i, t] * interval_s
+                             - alloc[i], 0.0)
+        contested = [i for i in range(n) if demand[i] > alloc[i] + 1e-9]
+        if len(contested) >= 2:
+            w = weights or {}
+            backlogged_jain.append(jain_index(
+                [served[i, t] / w.get(i, 1.0) for i in contested]))
+    total = float(served.sum()) * interval_s
+    offered = float(loads.sum()) * interval_s
+    return {
+        "served": served,
+        "per_tenant_served": served.sum(axis=1) * interval_s,
+        "utilization": total / (capacity * T * interval_s),
+        "served_frac": total / max(offered, 1e-12),
+        "jain_backlogged": (float(np.mean(backlogged_jain))
+                            if backlogged_jain else 1.0),
+        "backlog_final": backlog,
+    }

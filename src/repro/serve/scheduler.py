@@ -58,6 +58,39 @@ class TenantScheduler:
             self.buckets[tenant_id] = TokenBucket(
                 rate_tokens_per_s, burst or rate_tokens_per_s)
 
+    def set_rate(self, tenant_id: int,
+                 rate_tokens_per_s: Optional[float],
+                 burst: Optional[float] = None,
+                 now: Optional[float] = None):
+        """Controller push: retarget a tenant's admission rate mid-run.
+
+        Preserves the live bucket's token balance (a tick must not reopen a
+        fresh burst for a tenant it is throttling). ``None`` lifts the cap.
+        """
+        if tenant_id not in self.queues:
+            self.add_tenant(tenant_id)
+        if rate_tokens_per_s is None:
+            self.buckets.pop(tenant_id, None)
+            return
+        b = self.buckets.get(tenant_id)
+        if b is None:
+            self.buckets[tenant_id] = b = TokenBucket(
+                rate_tokens_per_s, burst or rate_tokens_per_s)
+            if now is not None:
+                b.updated = now
+        else:
+            b.set_rate(rate_tokens_per_s, burst, now)
+            if burst is None:
+                # requests admit whole: keep >= 1s of burst so a raised rate
+                # can actually cover a request (a capacity stuck below one
+                # request's cost would starve the queue no matter the rate)
+                b.capacity = max(b.capacity, float(rate_tokens_per_s))
+
+    def set_weight(self, tenant_id: int, weight: float):
+        if tenant_id not in self.queues:
+            self.add_tenant(tenant_id, weight=weight)
+        self.weights[tenant_id] = weight
+
     def submit(self, req: Request):
         if req.tenant_id not in self.queues:
             self.add_tenant(req.tenant_id)

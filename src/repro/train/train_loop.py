@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.collectives import nk_grad_sync, use_engine
 from repro.core.engine import CoreEngine
@@ -155,9 +156,9 @@ def make_train_step(cfg: ModelConfig, rcfg: RunConfig, mesh,
 
         gspecs = jax.tree.map(lambda _: P("pod"), grads_pp)
         ospecs = jax.tree.map(lambda _: P(), grads_pp)
-        grads = jax.shard_map(sync, mesh=mesh, in_specs=(gspecs,),
-                              out_specs=ospecs, axis_names={"pod"},
-                              check_vma=False)(grads_pp)
+        grads = shard_map(sync, mesh=mesh, in_specs=(gspecs,),
+                          out_specs=ospecs, axis_names={"pod"},
+                          check_vma=False)(grads_pp)
         metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_pp)
         new_p, new_o, om = adamw_update(state["params"], grads,
                                         state["opt"], rcfg)

@@ -1,0 +1,81 @@
+"""hypothesis shim: real property testing when installed, fixed examples else.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` so the tier-1 suite collects and runs on a clean interpreter.
+When hypothesis is missing, the fallback draws a deterministic batch of
+examples per test from a seeded RNG — far weaker than real shrinking search,
+but the same properties get exercised on the same code paths.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    from types import SimpleNamespace
+
+    _FALLBACK_EXAMPLES = 20
+    _FALLBACK_SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self.draw(rng)))
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _integers(min_value, max_value):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(min_value, max_value, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elements, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            out, seen, attempts = [], set(), 0
+            while len(out) < n and attempts < 20 * (n + 1):
+                attempts += 1
+                v = elements.draw(rng)
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+        return _Strategy(draw)
+
+    st = SimpleNamespace(sampled_from=_sampled_from, integers=_integers,
+                         floats=_floats, booleans=_booleans, lists=_lists)
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner():
+                rng = random.Random(_FALLBACK_SEED)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            # plain zero-arg function: pytest must not mistake the wrapped
+            # test's strategy params for fixtures (no functools.wraps — it
+            # sets __wrapped__ and inspect would recover the old signature)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

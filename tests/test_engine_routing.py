@@ -1,6 +1,6 @@
 """CoreEngine: routing table, ledger accounting, token buckets."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.engine import CoreEngine, TokenBucket, make_engine
 from repro.core.nqe import CommOp

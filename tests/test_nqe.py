@@ -1,6 +1,6 @@
 """CommOp (NQE) wire format: 32-byte invariant + roundtrip properties."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.nqe import AXIS_BITS, CommOp, NQE_SIZE, VERBS
 
