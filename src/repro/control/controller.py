@@ -17,6 +17,12 @@ number of enforcement points that draw from it:
 Rates are pushed with ``update_tenant_rate``/``set_rate`` so live token
 balances survive the update — a controller tick must not reopen a fresh
 burst for a tenant it is trying to throttle.
+
+``push_mode="delta"`` makes the push phase delta-based: only tenants whose
+per-point target moved beyond ``delta_tol`` (relative) since the last issued
+push get a call, so steady-state chatter is O(changed tenants), not
+O(tenants x enforcement points). ``push_calls``/``push_skipped`` count both
+sides and are exported as Prometheus counters.
 """
 from __future__ import annotations
 
@@ -37,11 +43,29 @@ class RateController:
     def __init__(self, capacity: float,
                  algo: Optional[CongestionControl] = None,
                  weights: Optional[Dict[int, float]] = None,
-                 alpha: float = 0.5, burst_s: float = 0.25):
+                 alpha: float = 0.5, burst_s: float = 0.25,
+                 push_mode: str = "full", delta_tol: float = 0.05,
+                 refresh_every: int = 32):
+        if push_mode not in ("full", "delta"):
+            raise ValueError(f"push_mode must be 'full' or 'delta', "
+                             f"got {push_mode!r}")
         self.capacity = float(capacity)
         self.algo = algo if algo is not None else WaterFill(weights)
         self.alpha = alpha
         self.burst_s = burst_s
+        # delta mode: only tenants whose per-point allocation moved beyond
+        # delta_tol (relative) get a set_rate call — O(changed) control-plane
+        # chatter per tick instead of O(tenants x points)
+        self.push_mode = push_mode
+        self.delta_tol = float(delta_tol)
+        # soft-state refresh: every refresh_every ticks delta mode pushes
+        # everything anyway, bounding how long a skipped push can diverge
+        # from an enforcement point that was reset behind our back
+        # (drop_tenant, set_rate(None), a restarted scheduler)
+        self.refresh_every = max(int(refresh_every), 1)
+        self._last_push: Dict[Tuple[str, int, int], float] = {}
+        self.push_calls = 0
+        self.push_skipped = 0
         self._engines: List[Tuple[object, EngineTelemetry]] = []
         self._schedulers: List[Tuple[object, SchedulerTelemetry]] = []
         self.allocations: Dict[int, float] = {}
@@ -80,19 +104,42 @@ class RateController:
         self.ticks += 1
         return self.allocations
 
+    def _changed(self, kind: str, idx: int, tenant: int, rate: float) -> bool:
+        """Delta gate: has this (enforcement point, tenant) target moved
+        beyond tolerance since the last push we actually issued?"""
+        if self.push_mode != "delta":
+            return True
+        prev = self._last_push.get((kind, idx, tenant))
+        if prev is None:
+            return True
+        return abs(rate - prev) > self.delta_tol * max(abs(prev), 1e-9)
+
     def _push(self, now: float) -> None:
+        if self.push_mode == "delta" and \
+                self.ticks % self.refresh_every == self.refresh_every - 1:
+            self._last_push.clear()        # periodic full refresh
         for tenant, rate in self.allocations.items():
             burst = max(rate * self.burst_s, 1.0)
-            for (engine, _tel), share in zip(
-                    self._engines, self._shares(tenant, self._engines)):
-                engine.update_tenant_rate(tenant, rate * share,
-                                          burst * share, now)
+            for i, ((engine, _tel), share) in enumerate(zip(
+                    self._engines, self._shares(tenant, self._engines))):
+                if self._changed("engine", i, tenant, rate * share):
+                    engine.update_tenant_rate(tenant, rate * share,
+                                              burst * share, now)
+                    self._last_push[("engine", i, tenant)] = rate * share
+                    self.push_calls += 1
+                else:
+                    self.push_skipped += 1
             # schedulers keep their bucket capacity: requests are admitted
             # whole, so shrinking burst below one request's token cost would
             # head-of-line-block the queue forever
-            for (scheduler, _tel), share in zip(
-                    self._schedulers, self._shares(tenant, self._schedulers)):
-                scheduler.set_rate(tenant, rate * share, None, now)
+            for i, ((scheduler, _tel), share) in enumerate(zip(
+                    self._schedulers, self._shares(tenant, self._schedulers))):
+                if self._changed("scheduler", i, tenant, rate * share):
+                    scheduler.set_rate(tenant, rate * share, None, now)
+                    self._last_push[("scheduler", i, tenant)] = rate * share
+                    self.push_calls += 1
+                else:
+                    self.push_skipped += 1
 
     @staticmethod
     def _shares(tenant: int, points) -> List[float]:
@@ -117,7 +164,11 @@ class RateController:
     # -- reporting ----------------------------------------------------------
     def counters(self) -> Dict[str, float]:
         out: Dict[str, float] = {"controller_ticks_total": self.ticks,
-                                 "controller_capacity": self.capacity}
+                                 "controller_capacity": self.capacity,
+                                 "controller_push_calls_total":
+                                     self.push_calls,
+                                 "controller_push_skipped_total":
+                                     self.push_skipped}
         for t, r in sorted(self.allocations.items()):
             out[f'nk_allocated_rate{{tenant="{t}"}}'] = r
         for _, tel in self._engines + self._schedulers:

@@ -79,7 +79,8 @@ class SharedBottleneckSim:
                  algo: Optional[CongestionControl] = None,
                  dt: float = 0.05, control_every: int = 4,
                  axes: Tuple[str, ...] = ("pod",),
-                 alpha: float = 0.5, burst_s: float = 0.25):
+                 alpha: float = 0.5, burst_s: float = 0.25,
+                 push_mode: str = "full", delta_tol: float = 0.05):
         self.tenants = list(tenants)
         self.capacity = float(capacity)
         self.dt = dt
@@ -91,7 +92,9 @@ class SharedBottleneckSim:
             algo = WaterFill({t.tenant_id: t.weight for t in self.tenants},
                              min_rate=capacity * 1e-3)
         self.controller = RateController(capacity, algo=algo, alpha=alpha,
-                                         burst_s=burst_s)
+                                         burst_s=burst_s,
+                                         push_mode=push_mode,
+                                         delta_tol=delta_tol)
         for eng in self.engines:
             self.controller.attach_engine(eng, axes)
         self._elapsed = 0.0

@@ -183,6 +183,13 @@ class SchedulerTelemetry:
         for t, o in sorted(self.obs.items()):
             out[f'nk_served_tokens_per_s{{tenant="{t}"}}'] = o.rate
             out[f'nk_queue_depth{{tenant="{t}"}}'] = o.queue
+        for t, row in sorted(self.scheduler.ledger().items()):
+            out[f'nk_admitted_requests_total{{tenant="{t}"}}'] = \
+                row["admitted_requests"]
+            out[f'nk_deferred_polls_total{{tenant="{t}"}}'] = \
+                row["deferred_polls"]
+            out[f'nk_mean_admit_wait_s{{tenant="{t}"}}'] = \
+                row["mean_admit_wait_s"]
         return out
 
     def export_prometheus(self) -> str:

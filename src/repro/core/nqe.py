@@ -39,6 +39,9 @@ VERB_CODE = {v: i for i, v in enumerate(VERBS)}
 
 # Mesh axes are encoded as a bitmask so multi-axis ops ("pod"+"data") fit 1B.
 AXIS_BITS = {"pod": 1, "data": 2, "model": 4, "stage": 8}
+_AXIS_MASK = 0
+for _b in AXIS_BITS.values():
+    _AXIS_MASK |= _b
 _STRUCT = struct.Struct("<BBBBIQQII")
 NQE_SIZE = _STRUCT.size
 assert NQE_SIZE == 32, NQE_SIZE
@@ -73,6 +76,10 @@ class CommOp:
     size_bytes: int = 0
     shape_desc: str = ""        # e.g. "bf16[256,4096,3072]"
     flags: int = 0
+    # carried wire checksum for ops decoded without their shape_desc: a
+    # forwarder's unpack() -> pack() must not replace the original
+    # shape_crc with crc32("") and break verification downstream
+    wire_crc: Optional[int] = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.verb not in VERB_CODE:
@@ -83,6 +90,8 @@ class CommOp:
 
     # --- 32-byte wire format (the NQE) ---------------------------------
     def pack(self) -> bytes:
+        crc = zlib.crc32(self.shape_desc.encode()) & 0xFFFFFFFF \
+            if self.shape_desc or self.wire_crc is None else self.wire_crc
         return _STRUCT.pack(
             VERB_CODE[self.verb],
             self.tenant_id,
@@ -91,14 +100,31 @@ class CommOp:
             self.tag & 0xFFFFFFFF,
             self.op_data & 0xFFFFFFFFFFFFFFFF,
             self.size_bytes & 0xFFFFFFFFFFFFFFFF,
-            zlib.crc32(self.shape_desc.encode()) & 0xFFFFFFFF,
+            crc,
             0,
         )
 
     @classmethod
-    def unpack(cls, raw: bytes) -> "CommOp":
+    def unpack(cls, raw: bytes,
+               expect_shape: Optional[str] = None) -> "CommOp":
+        """Decode a 32-byte NQE. Corrupt records are rejected, not guessed
+        at: an out-of-range verb code or unknown axis bit raises ValueError,
+        and ``expect_shape`` (the receiver's view of the payload) is checked
+        against the carried shape_crc — the semantic checksum that catches a
+        descriptor pointing at the wrong tensor."""
+        if len(raw) != NQE_SIZE:
+            raise ValueError(f"NQE must be {NQE_SIZE} bytes, got {len(raw)}")
         (verb, tenant, axis_code, flags, tag, op_data, size_bytes,
-         _crc, _rsvd) = _STRUCT.unpack(raw)
+         crc, _rsvd) = _STRUCT.unpack(raw)
+        if verb >= len(VERBS):
+            raise ValueError(f"invalid verb code {verb}")
+        if axis_code & ~_AXIS_MASK:
+            raise ValueError(f"unknown axis bits 0x{axis_code:02x}")
+        if expect_shape is not None and \
+                zlib.crc32(expect_shape.encode()) & 0xFFFFFFFF != crc:
+            raise ValueError(
+                f"shape_crc mismatch: NQE carries 0x{crc:08x}, "
+                f"expected shape {expect_shape!r}")
         return cls(
             verb=VERBS[verb],
             axes=_axes_from_code(axis_code),
@@ -107,6 +133,8 @@ class CommOp:
             op_data=op_data,
             size_bytes=size_bytes,
             flags=flags,
+            shape_desc=expect_shape or "",
+            wire_crc=crc,
         )
 
     def matches(self, other: "CommOp") -> bool:

@@ -1,12 +1,20 @@
 from repro.serve.engine import ServeEngine, Slot
 from repro.serve.multiplex import (
-    Trace, bursty_trace, chip_accounting, fair_replay, jain_index,
-    paper_table2_analog,
+    TRACES, Trace, adversarial_trace, bursty_trace, chip_accounting,
+    correlated_burst_trace, fair_replay, jain_index, paper_table2_analog,
+    ramp_trace, steady_trace,
+)
+from repro.serve.replay import (
+    ReplayReport, TenantReport, TraceReplayer, make_replay_engine,
+    replay_scenario, scenario_spec,
 )
 from repro.serve.scheduler import Request, TenantScheduler
 
 __all__ = [
-    "ServeEngine", "Slot", "Trace", "bursty_trace", "chip_accounting",
-    "fair_replay", "jain_index", "paper_table2_analog", "Request",
+    "ServeEngine", "Slot", "TRACES", "Trace", "adversarial_trace",
+    "bursty_trace", "chip_accounting", "correlated_burst_trace",
+    "fair_replay", "jain_index", "paper_table2_analog", "ramp_trace",
+    "steady_trace", "ReplayReport", "TenantReport", "TraceReplayer",
+    "make_replay_engine", "replay_scenario", "scenario_spec", "Request",
     "TenantScheduler",
 ]

@@ -101,10 +101,23 @@ class ServeEngine:
                 self.caches, caches1)
             first = int(jnp.argmax(last_logits[0]))
             req.generated.append(first)
+            req.admit_time = time.monotonic() if now is None else now
+            # prompt tokens + the first generated token: prefill produced
+            # both, so the ledger must bill them here — decode steps only
+            # account the tokens they themselves produce (leaving the
+            # prefill token out undercounts every request by one and caps
+            # measured throughput below the enforced allocation)
+            self.scheduler.account(req.tenant_id, len(req.prompt) + 1)
+            if req.max_new_tokens <= 1:
+                # prefill already produced the only requested token; a slot
+                # would run one decode step anyway and over-generate (and
+                # over-bill) past the bucket's prompt+max_new price
+                req.finish_time = req.admit_time
+                self.completed.append(req)
+                continue
             self.slots[i] = Slot(active=True, req=req,
                                  pos=len(req.prompt),
                                  remaining=req.max_new_tokens - 1)
-            self.scheduler.account(req.tenant_id, len(req.prompt))
 
     def step(self, now=None) -> int:
         """Admit + one decode step for all active slots. Returns #active."""
@@ -134,7 +147,7 @@ class ServeEngine:
             s.remaining -= 1
             self.scheduler.account(s.req.tenant_id, 1)
             if s.remaining <= 0 or s.pos >= self.max_seq - 1:
-                s.req.finish_time = time.monotonic()
+                s.req.finish_time = time.monotonic() if now is None else now
                 self.completed.append(s.req)
                 self.slots[i] = Slot()
         self.decode_steps += 1

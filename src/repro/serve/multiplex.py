@@ -54,6 +54,58 @@ def bursty_trace(n_tenants: int, intervals: int = 60, seed: int = 0,
     return Trace(loads=loads)
 
 
+def steady_trace(n_tenants: int, intervals: int = 60,
+                 rps: float = 10.0) -> Trace:
+    """Constant equal demand — the steady-state control-plane baseline
+    (delta-push should go near-silent on this one)."""
+    return Trace(loads=np.full((n_tenants, intervals), float(rps)))
+
+
+def adversarial_trace(n_tenants: int, intervals: int = 60,
+                      base: float = 8.0, hog_factor: float = 10.0,
+                      hog: int = -1) -> Trace:
+    """In-budget tenants at a constant trickle plus one misbehaver offering
+    ``hog_factor`` times the whole fleet's base load (paper Fig. 22: the
+    10x-overloading VM must not hurt its neighbours)."""
+    loads = np.full((n_tenants, intervals), float(base))
+    loads[hog] = hog_factor * base * n_tenants
+    return Trace(loads=loads)
+
+
+def correlated_burst_trace(n_tenants: int, intervals: int = 60,
+                           seed: int = 0, base: float = 4.0,
+                           burst: float = 30.0, period: int = 12,
+                           width: int = 3) -> Trace:
+    """All tenants burst *together* (one customer population): the worst
+    case for multiplexing economics and the stress case for fairness —
+    every burst is contested."""
+    rng = np.random.default_rng(seed)
+    loads = rng.gamma(2.0, base / 2.0, size=(n_tenants, intervals))
+    for k in range(0, intervals, period):
+        loads[:, k:k + width] += burst
+    return Trace(loads=loads)
+
+
+def ramp_trace(n_tenants: int, intervals: int = 60,
+               base: float = 6.0, peak: float = 40.0,
+               ramper: int = 0) -> Trace:
+    """One tenant ramps linearly from idle to ``peak`` while the rest hold
+    a constant base load — exercises controller tracking (allocations must
+    follow the ramp, so delta-push stays busy here)."""
+    loads = np.full((n_tenants, intervals), float(base))
+    loads[ramper] = np.linspace(0.0, peak, intervals)
+    return Trace(loads=loads)
+
+
+TRACES = {
+    "bursty": bursty_trace,
+    "steady": steady_trace,
+    "adversarial": adversarial_trace,
+    "correlated": correlated_burst_trace,
+    "ramp": ramp_trace,
+}
+
+
 def chip_accounting(trace: Trace, cap_per_chip: float,
                     engine_overhead_chips: int = 1) -> Dict:
     """Chips needed: dedicated per-tenant peaks vs one shared engine."""

@@ -1,0 +1,302 @@
+"""End-to-end fairness replay: Trace -> real Requests -> live ServeEngine.
+
+``fair_replay`` (repro.serve.multiplex) validates the paper's Fig. 21/22
+claims as a fluid-flow model; this module closes the gap to the actual
+datapath. A ``TraceReplayer`` takes the same ``Trace`` vocabulary (bursty,
+adversarial 10x-misbehaver, correlated-burst, ramp, steady), converts each
+interval's per-tenant load into real ``Request`` objects, and feeds them to
+a live ``ServeEngine`` — jitted prefill/decode, slot-based continuous
+batching, WFQ admission — with a ``RateController`` attached to the
+scheduler's token buckets (the tokens/s bottleneck). Everything runs on a
+virtual clock: one engine step advances time by a fixed ``step_dt`` chosen
+so the engine's raw throughput is ``headroom`` x the enforced capacity, so
+the *management plane*, not the slots, is the binding constraint.
+
+All metrics are read from real ledgers, never from the model:
+
+  * achieved tokens/s   TenantScheduler.served_tokens (prompt + decode)
+  * admission latency   arrival -> admission wait, scheduler ledger
+  * defer pressure      bucket-blocked poll counts
+  * Jain index          over achieved per-weight rates of contending tenants
+  * control chatter     RateController push_calls / push_skipped
+
+The scheduler runs with ``charge_prompt=True`` so bucket pricing, telemetry
+observation and the served-token ledger share one unit and the controller's
+``capacity`` is directly comparable to measured rates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.control.congestion import max_min_fair
+from repro.serve.multiplex import Trace, jain_index
+from repro.serve.scheduler import Request, TenantScheduler
+
+
+@dataclass
+class TenantReport:
+    """One tenant's end-to-end outcome, straight from the ledgers."""
+
+    demand_rate: float            # offered load, tokens/s
+    achieved_rate: float          # served tokens/s over the replay window
+    served_tokens: float
+    admitted_requests: int
+    completed_requests: int
+    deferred_polls: int
+    mean_admit_wait_s: float
+    weight: float = 1.0
+
+
+@dataclass
+class ReplayReport:
+    """Everything a fairness claim needs, measured on the real datapath."""
+
+    duration_s: float
+    capacity: float               # enforced bottleneck, tokens/s
+    per_tenant: Dict[int, TenantReport]
+    decode_steps: int
+    set_rate_calls: int = 0
+    push_skipped: int = 0
+
+    def rates(self) -> Dict[int, float]:
+        return {t: r.achieved_rate for t, r in self.per_tenant.items()}
+
+    def total_rate(self) -> float:
+        return sum(r.achieved_rate for r in self.per_tenant.values())
+
+    def contending(self) -> Sequence[int]:
+        """Tenants whose demand exceeded their fair share — the ones a
+        fairness index is actually about."""
+        ref = self.fair_reference()
+        return [t for t, r in self.per_tenant.items()
+                if r.demand_rate > ref[t] * 1.01]
+
+    def jain(self, tenants: Optional[Sequence[int]] = None) -> float:
+        ts = list(tenants) if tenants is not None else list(self.contending())
+        if not ts:
+            ts = list(self.per_tenant)
+        return jain_index([self.per_tenant[t].achieved_rate
+                           / self.per_tenant[t].weight for t in ts])
+
+    def fair_reference(self) -> Dict[int, float]:
+        """Weighted max-min fair allocation of the tenants' offered loads
+        over the enforced capacity — the paper's Fig. 21 target."""
+        demands = {t: r.demand_rate for t, r in self.per_tenant.items()}
+        weights = {t: r.weight for t, r in self.per_tenant.items()}
+        return max_min_fair(self.capacity, demands, weights)
+
+    def max_min_deviation(self) -> float:
+        """Worst relative gap between achieved rate and the max-min fair
+        reference, over tenants with non-trivial fair share."""
+        ref = self.fair_reference()
+        worst = 0.0
+        for t, want in ref.items():
+            if want <= 1e-9:
+                continue
+            worst = max(worst,
+                        abs(self.per_tenant[t].achieved_rate - want) / want)
+        return worst
+
+
+# canonical request shape for the e2e scenarios — the one place the
+# request's token price (prompt + decode) is defined; bench_fairness --e2e
+# and tests derive from these instead of re-hardcoding them
+PROMPT_LEN = 2
+MAX_NEW_TOKENS = 6
+TOKENS_PER_REQUEST = PROMPT_LEN + MAX_NEW_TOKENS
+
+
+class TraceReplayer:
+    """Drives one ServeEngine through a Trace on a virtual clock."""
+
+    def __init__(self, engine, *, capacity: float,
+                 interval_s: float = 1.0, prompt_len: int = PROMPT_LEN,
+                 max_new_tokens: int = MAX_NEW_TOKENS, headroom: float = 1.5,
+                 weights: Optional[Dict[int, float]] = None):
+        self.engine = engine
+        self.capacity = float(capacity)
+        self.interval_s = float(interval_s)
+        self.prompt_len = int(prompt_len)
+        self.max_new_tokens = int(max_new_tokens)
+        self.weights = dict(weights or {})
+        self.tokens_per_request = self.prompt_len + self.max_new_tokens
+        # raw engine throughput at full slots is B*(p+n)/n tokens per step;
+        # pick step_dt so that equals headroom * capacity: enforcement binds
+        raw_per_step = engine.B * self.tokens_per_request / self.max_new_tokens
+        self.step_dt = raw_per_step / (headroom * self.capacity)
+        self._req_id = 0
+        self._vt = 0.0
+
+    # ------------------------------------------------------------------
+    def _submit(self, tenant: int, now: float):
+        self._req_id += 1
+        self.engine.submit(Request(
+            tenant_id=tenant, prompt=list(range(1, self.prompt_len + 1)),
+            max_new_tokens=self.max_new_tokens, req_id=self._req_id,
+            arrival=now))
+
+    def run(self, trace: Trace, *, unit: str = "requests") -> ReplayReport:
+        """Replay ``trace`` (per-tenant loads per interval). ``unit`` is
+        what a load value means: "requests" (requests/s, the multiplexing
+        vocabulary) or "tokens" (tokens/s, divided by request cost)."""
+        loads = np.asarray(trace.loads, float)
+        if unit == "tokens":
+            loads = loads / self.tokens_per_request
+        elif unit != "requests":
+            raise ValueError(f"unknown unit {unit!r}")
+        n, T = loads.shape
+        sched: TenantScheduler = self.engine.scheduler
+        for i in range(n):
+            if i not in sched.queues:
+                sched.add_tenant(i, weight=self.weights.get(i, 1.0))
+            else:
+                sched.set_weight(i, self.weights.get(i, 1.0))
+        start_vt = self._vt
+        served0 = {i: sched.served_tokens.get(i, 0) for i in range(n)}
+        admitted0 = {i: sched.admitted_requests.get(i, 0) for i in range(n)}
+        deferred0 = {i: sched.deferred_polls.get(i, 0) for i in range(n)}
+        wait0 = {i: sched.admit_wait_sum.get(i, 0.0) for i in range(n)}
+        completed0 = len(self.engine.completed)
+        ctrl = self.engine.controller
+        calls0 = getattr(ctrl, "push_calls", 0)
+        skip0 = getattr(ctrl, "push_skipped", 0)
+        steps0 = self.engine.decode_steps
+
+        frac = np.zeros(n)
+        for t in range(T):
+            interval_end = self._vt + self.interval_s
+            for i in range(n):
+                want = loads[i, t] * self.interval_s + frac[i]
+                k = int(want)
+                frac[i] = want - k
+                for _ in range(k):
+                    self._submit(i, self._vt)
+            while self._vt < interval_end - 1e-9:
+                self.engine.step(now=self._vt)
+                self._vt += self.step_dt
+
+        duration = self._vt - start_vt
+        completed: Dict[int, int] = {}
+        for req in self.engine.completed[completed0:]:
+            completed[req.tenant_id] = completed.get(req.tenant_id, 0) + 1
+        per_tenant: Dict[int, TenantReport] = {}
+        for i in range(n):
+            # every counter is windowed to THIS run: repeated run() calls on
+            # one replayer (phased scenarios) must not leak prior pressure
+            served = sched.served_tokens.get(i, 0) - served0[i]
+            adm = sched.admitted_requests.get(i, 0) - admitted0[i]
+            wait = sched.admit_wait_sum.get(i, 0.0) - wait0[i]
+            per_tenant[i] = TenantReport(
+                demand_rate=float(loads[i].mean()) * self.tokens_per_request,
+                achieved_rate=served / duration,
+                served_tokens=float(served),
+                admitted_requests=adm,
+                completed_requests=completed.get(i, 0),
+                deferred_polls=sched.deferred_polls.get(i, 0) - deferred0[i],
+                mean_admit_wait_s=wait / adm if adm else 0.0,
+                weight=self.weights.get(i, 1.0),
+            )
+        return ReplayReport(
+            duration_s=duration, capacity=self.capacity,
+            per_tenant=per_tenant,
+            decode_steps=self.engine.decode_steps - steps0,
+            set_rate_calls=getattr(ctrl, "push_calls", 0) - calls0,
+            push_skipped=getattr(ctrl, "push_skipped", 0) - skip0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Canonical scenarios (the shared vocabulary with bench_fairness/multiplex)
+# ---------------------------------------------------------------------------
+
+
+def make_replay_engine(*, capacity: float, batch_slots: int = 4,
+                       max_seq: int = 32, control_every: int = 4,
+                       push_mode: str = "full", delta_tol: float = 0.05,
+                       model: str = "llama3.2-3b", weights=None, mesh=None):
+    """A smoke-scale ServeEngine + WFQ scheduler + attached RateController,
+    wired the way the e2e scenarios expect (charge_prompt pricing, tokens/s
+    bottleneck = ``capacity``)."""
+    from repro.configs import RunConfig, get_smoke_config
+    from repro.control.controller import RateController
+    from repro.launch.mesh import make_single_device_mesh
+    from repro.serve.engine import ServeEngine
+
+    sched = TenantScheduler(policy="wfq", charge_prompt=True)
+    ctrl = RateController(capacity, weights=weights, alpha=0.6,
+                          push_mode=push_mode, delta_tol=delta_tol)
+    ctrl.attach_scheduler(sched)
+    eng = ServeEngine(get_smoke_config(model),
+                      RunConfig(attn_q_block=16, attn_kv_block=16),
+                      mesh if mesh is not None else make_single_device_mesh(),
+                      batch_slots=batch_slots, max_seq=max_seq,
+                      scheduler=sched, controller=ctrl,
+                      control_every=control_every)
+    return eng
+
+
+def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
+                  capacity: Optional[float] = None, seed: int = 0):
+    """(trace, enforced capacity) for one named scenario — the single
+    source of truth shared by ``replay_scenario``, ``bench_fairness --e2e``
+    and the scenario tests.
+
+    Loads are generated in requests/s by the shared trace vocabulary
+    (``repro.serve.multiplex.TRACES``) and capacities chosen so aggregate
+    demand oversubscribes the bottleneck where the scenario calls for it.
+    """
+    from repro.serve import multiplex as mx
+
+    per_req = TOKENS_PER_REQUEST
+    if name == "steady":
+        trace = mx.steady_trace(n_tenants, intervals, rps=3.0)
+        demand = 3.0 * per_req * n_tenants
+        cap = capacity or demand * 0.7            # mild, stable contention
+    elif name == "adversarial":
+        trace = mx.adversarial_trace(n_tenants, intervals, base=1.0,
+                                     hog_factor=10.0)
+        cap = capacity or 1.0 * per_req * (n_tenants + 3)
+    elif name == "correlated":
+        trace = mx.correlated_burst_trace(n_tenants, intervals, seed=seed,
+                                          base=1.0, burst=6.0, period=8,
+                                          width=2)
+        cap = capacity or float(trace.loads.sum(axis=0).mean()) * per_req * 0.8
+    elif name == "ramp":
+        trace = mx.ramp_trace(n_tenants, intervals, base=2.0, peak=8.0)
+        cap = capacity or float(trace.loads.sum(axis=0).mean()) * per_req * 0.7
+    elif name == "bursty":
+        trace = mx.bursty_trace(n_tenants, intervals, seed=seed, base=2.0,
+                                burst=8.0)
+        cap = capacity or float(trace.loads.sum(axis=0).mean()) * per_req * 0.7
+    else:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(mx.TRACES)} ")
+    return trace, cap
+
+
+# row index of the misbehaver in the adversarial trace (multiplex's default)
+ADVERSARIAL_HOG = -1
+
+
+def adversarial_baseline(trace: Trace) -> Trace:
+    """The adversarial fleet with the misbehaver removed — the hog-free
+    baseline isolation claims compare against. One definition, so the hog
+    row index can never silently diverge between bench and tests."""
+    return Trace(loads=np.delete(trace.loads, ADVERSARIAL_HOG, axis=0))
+
+
+def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
+                    capacity: Optional[float] = None, engine=None,
+                    push_mode: str = "full", weights=None,
+                    seed: int = 0) -> ReplayReport:
+    """Run one named scenario end-to-end and return the measured report."""
+    trace, cap = scenario_spec(name, n_tenants=n_tenants,
+                               intervals=intervals, capacity=capacity,
+                               seed=seed)
+    eng = engine if engine is not None else \
+        make_replay_engine(capacity=cap, push_mode=push_mode, weights=weights)
+    rep = TraceReplayer(eng, capacity=cap, weights=weights)
+    return rep.run(trace)

@@ -25,23 +25,36 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     req_id: int = 0
-    arrival: float = 0.0
+    arrival: float = -1.0      # < 0: unknown (excluded from wait ledger)
     # filled by the engine
     generated: List[int] = field(default_factory=list)
+    admit_time: float = -1.0
     finish_time: float = -1.0
 
 
 class TenantScheduler:
     """Fair multi-tenant admission: WFQ + optional token buckets + RR."""
 
-    def __init__(self, policy: str = "wfq"):
+    def __init__(self, policy: str = "wfq", charge_prompt: bool = False):
         assert policy in ("wfq", "rr")
         self.policy = policy
+        # charge_prompt: buckets price a request at prompt + decode tokens
+        # instead of decode only, so admission rates, telemetry (which sees
+        # served prompt+decode tokens) and controller capacity share one
+        # unit. The e2e replay harness turns this on; default keeps the
+        # decode-only pricing.
+        self.charge_prompt = charge_prompt
         self.queues: Dict[int, Deque[Request]] = {}
         self.weights: Dict[int, float] = {}
         self.buckets: Dict[int, TokenBucket] = {}
         self.vtime: Dict[int, float] = {}
         self.served_tokens: Dict[int, int] = {}
+        # admission ledger (what the replay harness reads): requests admitted,
+        # polls where a queued tenant was blocked by its bucket, and the
+        # summed arrival->admission wait (needs ``now`` passed through)
+        self.admitted_requests: Dict[int, int] = {}
+        self.deferred_polls: Dict[int, int] = {}
+        self.admit_wait_sum: Dict[int, float] = {}
         self._rr = itertools.count()
         self._rr_order: List[int] = []
 
@@ -66,9 +79,13 @@ class TenantScheduler:
 
         Preserves the live bucket's token balance (a tick must not reopen a
         fresh burst for a tenant it is throttling). ``None`` lifts the cap.
+
+        Rate-only: a tenant unknown to this scheduler gets a bucket but NO
+        queue registration. Controllers probe every enforcement point for
+        every tenant, so registering here would grow ghost tenants — empty
+        queues that WFQ/RR scan forever and whose stale rate entry would
+        greet the tenant whenever it first shows up (see ``drop_tenant``).
         """
-        if tenant_id not in self.queues:
-            self.add_tenant(tenant_id)
         if rate_tokens_per_s is None:
             self.buckets.pop(tenant_id, None)
             return
@@ -91,6 +108,25 @@ class TenantScheduler:
             self.add_tenant(tenant_id, weight=weight)
         self.weights[tenant_id] = weight
 
+    def drop_tenant(self, tenant_id: int):
+        """Forget a departed tenant entirely: queue state AND rate entry.
+
+        Regression guard: a tenant with zero queued requests used to keep a
+        stale bucket (last pushed rate) forever after ``set_rate``; a tenant
+        returning much later was admitted against that stale rate instead of
+        starting uncapped.
+        """
+        self.queues.pop(tenant_id, None)
+        self.weights.pop(tenant_id, None)
+        self.buckets.pop(tenant_id, None)
+        self.vtime.pop(tenant_id, None)
+        self.served_tokens.pop(tenant_id, None)
+        self.admitted_requests.pop(tenant_id, None)
+        self.deferred_polls.pop(tenant_id, None)
+        self.admit_wait_sum.pop(tenant_id, None)
+        if tenant_id in self._rr_order:
+            self._rr_order.remove(tenant_id)
+
     def submit(self, req: Request):
         if req.tenant_id not in self.queues:
             self.add_tenant(req.tenant_id)
@@ -110,7 +146,10 @@ class TenantScheduler:
             return True
         head = self.queues[t][0]
         # admissible iff the bucket can cover the whole request NOW
-        return b.wait_time(head.max_new_tokens, now) <= 0.0
+        ok = b.wait_time(self._cost(head), now) <= 0.0
+        if not ok:
+            self.deferred_polls[t] = self.deferred_polls.get(t, 0) + 1
+        return ok
 
     def next_request(self, now: Optional[float] = None) -> Optional[Request]:
         """Pick the next request to admit (or None)."""
@@ -129,11 +168,19 @@ class TenantScheduler:
         t = min(cands, key=lambda q: (self.vtime[q], q))
         return self._take(t, now)
 
+    def _cost(self, req: Request) -> int:
+        return req.max_new_tokens + \
+            (len(req.prompt) if self.charge_prompt else 0)
+
     def _take(self, t: int, now) -> Request:
         req = self.queues[t].popleft()
         b = self.buckets.get(t)
         if b is not None:
-            b.consume(req.max_new_tokens, now)
+            b.consume(self._cost(req), now)
+        self.admitted_requests[t] = self.admitted_requests.get(t, 0) + 1
+        if now is not None and req.arrival >= 0.0:
+            self.admit_wait_sum[t] = \
+                self.admit_wait_sum.get(t, 0.0) + max(now - req.arrival, 0.0)
         return req
 
     # -- accounting (engine reports completed work) -------------------------
@@ -146,3 +193,20 @@ class TenantScheduler:
     def shares(self) -> Dict[int, float]:
         tot = max(sum(self.served_tokens.values()), 1)
         return {t: n / tot for t, n in self.served_tokens.items()}
+
+    def ledger(self) -> Dict[int, Dict[str, float]]:
+        """Per-tenant admission ledger: the replay harness's source of truth
+        (served tokens, admitted/deferred counts, mean admission wait)."""
+        out: Dict[int, Dict[str, float]] = {}
+        for t in set(self.served_tokens) | set(self.admitted_requests) \
+                | set(self.deferred_polls):
+            admitted = self.admitted_requests.get(t, 0)
+            out[t] = {
+                "served_tokens": float(self.served_tokens.get(t, 0)),
+                "admitted_requests": float(admitted),
+                "deferred_polls": float(self.deferred_polls.get(t, 0)),
+                "queued": float(self.pending(t)),
+                "mean_admit_wait_s": (self.admit_wait_sum.get(t, 0.0)
+                                      / admitted if admitted else 0.0),
+            }
+        return out

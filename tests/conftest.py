@@ -8,6 +8,25 @@ import jax  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_collection_modifyitems(config, items):
+    """Deselect `slow` tests from the default (tier-1) run.
+
+    Stays out of the way when the user expressed intent: an explicit `-m`
+    expression (CI's slow job runs `-m slow`) or a test named by node id
+    (`pytest tests/test_replay.py::test_x` must run it, not report
+    '1 deselected')."""
+    if config.option.markexpr:
+        return
+    if any("::" in arg for arg in config.invocation_params.args):
+        return
+    kept, dropped = [], []
+    for item in items:
+        (dropped if "slow" in item.keywords else kept).append(item)
+    if dropped:
+        config.hook.pytest_deselected(items=dropped)
+        items[:] = kept
+
+
 @pytest.fixture(scope="session")
 def mesh1():
     from repro.launch.mesh import make_single_device_mesh

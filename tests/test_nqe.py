@@ -1,8 +1,9 @@
-"""CommOp (NQE) wire format: 32-byte invariant + roundtrip properties."""
+"""CommOp (NQE) wire format: 32-byte invariant, roundtrip properties,
+semantic-checksum (shape_crc) verification, corrupt-record rejection."""
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.nqe import AXIS_BITS, CommOp, NQE_SIZE, VERBS
+from repro.core.nqe import AXIS_BITS, _AXIS_MASK, CommOp, NQE_SIZE, VERBS
 
 
 def test_nqe_is_32_bytes():
@@ -33,6 +34,77 @@ def test_nqe_roundtrip(verb, axes, tenant, tag, op_data, size, flags):
     assert back.size_bytes == size
     assert back.flags == flags
     assert back.matches(op)
+
+
+@given(verb=st.sampled_from(VERBS), axes=axes_st,
+       shape=st.sampled_from(["bf16[3,4]", "f32[256,4096]", "i8[1]", ""]))
+@settings(max_examples=100, deadline=None)
+def test_nqe_crc_roundtrip_with_expected_shape(verb, axes, shape):
+    """unpack(expect_shape=) verifies the semantic checksum and restores
+    the descriptor string the crc was computed from."""
+    op = CommOp(verb=verb, axes=axes, shape_desc=shape)
+    back = CommOp.unpack(op.pack(), expect_shape=shape)
+    assert back.shape_desc == shape
+    assert back.pack() == op.pack()          # full 32-byte identity
+
+
+@given(verb=st.sampled_from(VERBS), axes=axes_st)
+@settings(max_examples=50, deadline=None)
+def test_nqe_crc_mismatch_detected(verb, axes):
+    op = CommOp(verb=verb, axes=axes, shape_desc="bf16[256,4096]")
+    with pytest.raises(ValueError, match="shape_crc mismatch"):
+        CommOp.unpack(op.pack(), expect_shape="bf16[256,4097]")
+
+
+def test_nqe_invalid_verb_code_rejected():
+    raw = bytearray(CommOp(verb="psum", axes=("pod",)).pack())
+    raw[0] = len(VERBS)                       # first out-of-range code
+    with pytest.raises(ValueError, match="invalid verb code"):
+        CommOp.unpack(bytes(raw))
+    raw[0] = 0xFF
+    with pytest.raises(ValueError, match="invalid verb code"):
+        CommOp.unpack(bytes(raw))
+
+
+@given(bits=st.integers(1, 255))
+@settings(max_examples=60, deadline=None)
+def test_nqe_unknown_axis_bits_rejected(bits):
+    raw = bytearray(CommOp(verb="psum", axes=()).pack())
+    raw[2] = bits
+    if bits & ~_AXIS_MASK:
+        with pytest.raises(ValueError, match="unknown axis bits"):
+            CommOp.unpack(bytes(raw))
+    else:
+        assert set(CommOp.unpack(bytes(raw)).axes) == \
+            {a for a, b in AXIS_BITS.items() if bits & b}
+
+
+def test_nqe_forwarder_roundtrip_preserves_crc():
+    """A node that decodes an NQE without knowing the shape and re-encodes
+    it to forward must keep the original semantic checksum intact."""
+    op = CommOp(verb="psum", axes=("pod",), shape_desc="bf16[256,4096]")
+    forwarded = CommOp.unpack(op.pack()).pack()     # decode blind, re-encode
+    assert forwarded == op.pack()                   # byte-identical
+    # the final receiver can still verify against the true shape
+    back = CommOp.unpack(forwarded, expect_shape="bf16[256,4096]")
+    assert back.shape_desc == "bf16[256,4096]"
+
+
+def test_nqe_wrong_length_rejected():
+    op = CommOp(verb="psum", axes=("pod",))
+    with pytest.raises(ValueError, match="32 bytes"):
+        CommOp.unpack(op.pack()[:31])
+    with pytest.raises(ValueError, match="32 bytes"):
+        CommOp.unpack(op.pack() + b"\x00")
+
+
+def test_matches_ignores_crc_but_not_header():
+    a = CommOp(verb="psum", axes=("pod",), shape_desc="bf16[3,4]")
+    b = CommOp(verb="psum", axes=("pod",), shape_desc="f32[9,9]")
+    assert a.matches(b)                       # crc excluded from matches()
+    assert a.pack() != b.pack()               # ...but present on the wire
+    c = CommOp(verb="all_gather", axes=("pod",), shape_desc="bf16[3,4]")
+    assert not a.matches(c)
 
 
 def test_bad_verb_rejected():

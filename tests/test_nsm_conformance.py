@@ -1,0 +1,150 @@
+"""NSM conformance: every stack must match the native (XLA) stack's numerics
+for every verb it overrides — the paper's contract that stacks are swappable
+behind one API, pinned as a parametrized suite.
+
+The case matrix is discovered from the registry: for each registered NSM we
+find the verbs its class (or any ancestor below ``Nsm``) overrides and run
+them against ``XlaNsm`` across axis combinations and dtypes. Tolerances are
+tiered: exact-ish for explicit-schedule stacks (reordered float adds), loose
+for the int8-on-the-wire compressed stack, looser again under bfloat16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.nqe import CommOp
+from repro.core.nsm import Nsm, available_nsms, get_nsm
+
+# (relative) tolerance tiers per stack, scaled up under bf16
+_TOL = {"ring": 1e-5, "ring2": 1e-5, "hierarchical": 1e-5,
+        "compressed": 2e-2, "shm": 1e-6}
+_BF16_FACTOR = {"compressed": 4.0}   # int8 wire + bf16 carrier compounds
+
+_VERBS_UNDER_TEST = ("psum", "all_gather", "reduce_scatter")
+
+_PSUM_AXES = [("model",), ("data",), ("pod", "data")]
+_ONE_AXES = [("model",), ("data",)]
+_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _overridden(name: str):
+    cls = type(get_nsm(name))
+    out = []
+    for verb in _VERBS_UNDER_TEST:
+        for klass in cls.mro():
+            if klass in (Nsm, object):
+                break
+            if verb in klass.__dict__:
+                out.append(verb)
+                break
+    return out
+
+
+CASES = []
+for _name in available_nsms():
+    if _name == "xla":
+        continue
+    for _verb in _overridden(_name):
+        axes_list = _PSUM_AXES if _verb == "psum" else _ONE_AXES
+        for _axes in axes_list:
+            for _dt in _DTYPES:
+                CASES.append((_name, _verb, _axes, _dt))
+
+
+def _tol(name: str, dtype) -> float:
+    tol = _TOL[name]
+    if dtype == jnp.bfloat16:
+        tol = max(tol * _BF16_FACTOR.get(name, 1.0), 2e-2)
+    return tol
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 2, pod=2)
+
+
+def _x(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(7), (16, 32), jnp.float32)
+    return x.astype(dtype)
+
+
+def _specs(verb, axes):
+    """(in_spec, out_spec, check_vma, kwargs) for one verb invocation."""
+    if verb == "psum":
+        spec = P(None, "model") if axes == ("model",) else P(axes, None)
+        return spec, spec, None, {}
+    if verb == "reduce_scatter":
+        return P(None, None), P(axes[0], None), None, {"axis": 0}
+    if verb == "all_gather":
+        return P(axes[0], None), P(None, None), False, {"axis": 0}
+    raise AssertionError(verb)
+
+
+def _run(mesh, nsm, verb, axes, x, *, op=None, **kw):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    in_spec, out_spec, check_vma, extra = _specs(verb, axes)
+    extra.update(kw)
+
+    def f(v):
+        return getattr(nsm, verb)(v, axes, axis_sizes=sizes, op=op, **extra)
+
+    return np.asarray(jax.jit(shard_map(
+        f, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+        check_vma=check_vma))(x), np.float32)
+
+
+_REF_MEMO = {}
+
+
+def _ref(mesh, verb, axes, dtype, x):
+    key = (verb, axes, jnp.dtype(dtype).name)
+    if key not in _REF_MEMO:
+        _REF_MEMO[key] = _run(mesh, get_nsm("xla"), verb, axes, x)
+    return _REF_MEMO[key]
+
+
+@pytest.mark.parametrize(
+    "name,verb,axes,dtype", CASES,
+    ids=[f"{n}-{v}-{'+'.join(a)}-{jnp.dtype(d).name}"
+         for n, v, a, d in CASES])
+def test_nsm_matches_xla(mesh, name, verb, axes, dtype):
+    x = _x(dtype)
+    out = _run(mesh, get_nsm(name), verb, axes, x)
+    ref = _ref(mesh, verb, axes, dtype, x)
+    tol = _tol(name, dtype)
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * float(np.abs(ref).max()))
+
+
+def test_registry_covers_expected_stacks():
+    """The suite above is only exhaustive if the registry is: pin the stock
+    stacks so a new NSM must register (and thereby enter the matrix)."""
+    have = set(available_nsms())
+    assert {"xla", "ring", "ring2", "hierarchical", "compressed",
+            "shm"} <= have
+
+
+def test_compressed_integer_passthrough_is_exact(mesh):
+    """Integer payloads must bypass the int8 wire entirely (exact sum)."""
+    x = jnp.arange(16 * 32, dtype=jnp.int32).reshape(16, 32)
+    out = _run(mesh, get_nsm("compressed"), "psum", ("pod", "data"), x)
+    ref = _run(mesh, get_nsm("xla"), "psum", ("pod", "data"), x)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_shm_elision_contract(mesh):
+    """ShmNsm's one divergence from XLA numerics is the documented one:
+    op_data bit0 (engine-proven sharding compatibility) elides the op."""
+    x = _x(jnp.float32)
+    op = CommOp(verb="psum", axes=("model",), op_data=1)
+    out = _run(mesh, get_nsm("shm"), "psum", ("model",), x, op=op)
+    np.testing.assert_allclose(out, np.asarray(x))   # identity, no reduce
+    # without the bit it must agree with the native stack
+    op0 = CommOp(verb="psum", axes=("model",))
+    out0 = _run(mesh, get_nsm("shm"), "psum", ("model",), x, op=op0)
+    ref = _run(mesh, get_nsm("xla"), "psum", ("model",), x)
+    np.testing.assert_allclose(out0, ref, rtol=1e-6, atol=1e-6)

@@ -71,7 +71,10 @@ def test_elastic_remesh(pod_mesh):
 
 def test_straggler_watchdog(pod_mesh):
     with tempfile.TemporaryDirectory() as d:
-        delays = lambda step: 0.5 if step == 7 else 0.0
+        # 2s >> 3x any plausible CPU step time: a 0.5s delay was flaky on a
+        # loaded machine, where ordinary steps approach 0.25s and the
+        # watchdog's 3x-median bar catches up with the injection
+        delays = lambda step: 2.0 if step == 7 else 0.0
         r = Runner(CFG, _rcfg(straggler_factor=3.0), pod_mesh,
                    for_model(CFG, SHAPE), d, delay_injector=delays)
         r.init_state(jax.random.PRNGKey(1))
