@@ -1,0 +1,50 @@
+"""Live tenant migration on a multi-engine fabric — operator placement.
+
+    PYTHONPATH=src python examples/cluster_migration.py
+
+Three smoke-scale ServeEngines behind ONE RateController serve four
+tenants; tenant 3 misbehaves (10x the bottleneck) and heats its engine.
+Mid-replay the operator rebalances: the hog is migrated *live* to the
+coolest engine — unserved queue, token-bucket level and ledger continuity
+move with it, in-flight slots drain (and bill) on the source — while the
+fairness/isolation bounds hold and the served-token ledger is conserved.
+The guest never notices: it keeps submitting, the placement map routes.
+"""
+from repro.serve.replay import (
+    TraceReplayer, make_replay_cluster, scenario_spec,
+)
+
+trace, cap = scenario_spec("migration", n_tenants=4, intervals=12)
+cluster = make_replay_cluster(capacity=cap, engines=3)
+
+log = []
+
+
+def rebalance(cl, now):
+    log.append(cl.rebalance(now=now))
+
+
+print(f"cluster: 3 engines, one shared {cap:.0f} tok/s bottleneck; "
+      f"adversarial 10x hog\n")
+rep = TraceReplayer(cluster, capacity=cap).run(trace,
+                                               events=[(6, rebalance)])
+rec = log[0]
+print(f"migration @ step {rec.started_step}: tenant {rec.tenant} "
+      f"engine {rec.src} -> {rec.dst}; {rec.queued_moved} queued requests "
+      f"and {rec.bucket_tokens_moved:.1f} bucket tokens moved, "
+      f"{rec.inflight_at_move} in-flight slots drained on the source")
+cluster.assert_ledger_conservation(rec.tenant)
+print(f"ledger conserved: {cluster.tenant_served_tokens(rec.tenant):.0f} "
+      f"tokens == request-level ground truth "
+      f"{cluster.tenant_billed_ground_truth(rec.tenant)}\n")
+print("tenant  demand(tok/s)  achieved  engine")
+for t, r in sorted(rep.per_tenant.items()):
+    tag = "  <- migrated hog" if t == rec.tenant else ""
+    print(f"  {t}    {r.demand_rate:10.1f} {r.achieved_rate:9.1f}"
+          f"      e{rep.placement[t]}{tag}")
+print(f"\nJain {rep.jain():.3f} across the migration window; "
+      f"{rep.migrations} live migration(s)")
+print("\nplacement/migration counters (excerpt):")
+for line in cluster.export_prometheus().splitlines():
+    if "migra" in line or "placement" in line:
+        print("  " + line)

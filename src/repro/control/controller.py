@@ -31,7 +31,8 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.control.congestion import CongestionControl, WaterFill
 from repro.control.telemetry import (
-    EngineTelemetry, SchedulerTelemetry, TenantObs, merge_obs,
+    EngineTelemetry, SchedulerTelemetry, TenantObs, format_prometheus,
+    merge_obs,
 )
 
 _PROBE_FRAC = 0.02     # idle-enforcement-point floor, fraction of allocation
@@ -46,6 +47,15 @@ class RateController:
                  alpha: float = 0.5, burst_s: float = 0.25,
                  push_mode: str = "full", delta_tol: float = 0.05,
                  refresh_every: int = 32):
+        """``capacity``: the ONE shared bottleneck in units/s — bytes/s
+        when the enforcement points are CoreEngines, tokens/s when they
+        are TenantSchedulers (don't mix units under one controller).
+        ``weights``: per-tenant fair-share weights for the default
+        WaterFill ``algo``. ``alpha``: telemetry EWMA gain in (0, 1].
+        ``burst_s``: pushed bucket burst, in seconds' worth of the
+        allocated rate. ``delta_tol``: relative move that makes a target
+        worth pushing in delta mode; ``refresh_every``: ticks between
+        delta-mode full re-pushes (soft-state bound)."""
         if push_mode not in ("full", "delta"):
             raise ValueError(f"push_mode must be 'full' or 'delta', "
                              f"got {push_mode!r}")
@@ -74,23 +84,50 @@ class RateController:
 
     # -- wiring -------------------------------------------------------------
     def attach_engine(self, engine, axes: Optional[Iterable[str]] = None):
+        """Add a CoreEngine enforcement point (bytes/s bottleneck).
+        ``axes``: restrict telemetry to CommOps intersecting these mesh
+        axes (None = meter everything). Returns self for chaining."""
         self._engines.append(
             (engine, EngineTelemetry(engine, self.alpha, axes)))
         return self
 
     def attach_scheduler(self, scheduler):
+        """Add a TenantScheduler enforcement point (tokens/s bottleneck).
+        Several schedulers may share this controller's one ``capacity`` —
+        the multi-engine cluster case. Returns self for chaining."""
         self._schedulers.append(
             (scheduler, SchedulerTelemetry(scheduler, self.alpha)))
         return self
 
+    def invalidate_tenant(self, tenant: int) -> None:
+        """Forget delta-push history for one tenant: the next tick pushes
+        its rate to *every* enforcement point regardless of ``delta_tol``.
+
+        Required around live migration: moving a tenant resets enforcement
+        state (the source drops its bucket, the destination imports a
+        transferred one) that ``_last_push`` knows nothing about — without
+        invalidation, delta mode would judge the new target "unchanged" and
+        skip the push, resurrecting the PR 2 stale-rate bug at cluster
+        scale."""
+        for key in [k for k in self._last_push if k[2] == tenant]:
+            del self._last_push[key]
+
     # -- observation --------------------------------------------------------
     def observe(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        """Sample every attached enforcement point at time ``now`` (seconds)
+        and return the merged per-tenant view (units/s summed across
+        points — one tenant's traffic through several engines)."""
         per_source = [tel.update(now) for _, tel in self._engines]
         per_source += [tel.update(now) for _, tel in self._schedulers]
         return merge_obs(per_source)
 
     # -- the loop body ------------------------------------------------------
     def tick(self, now: Optional[float] = None) -> Dict[int, float]:
+        """One control interval: observe -> allocate -> push.
+
+        ``now``: seconds (virtual or wall clock; defaults to wall clock).
+        Returns the global per-tenant allocations in units/s ({} until the
+        first interval with a usable rate signal)."""
         now = time.monotonic() if now is None else now
         merged = self.observe(now)
         if not merged or not any(o.offered > 0 or o.queue > 0
@@ -178,5 +215,4 @@ class RateController:
         return out
 
     def export_prometheus(self) -> str:
-        return "\n".join(f"{name} {value:.6g}"
-                         for name, value in self.counters().items()) + "\n"
+        return format_prometheus(self.counters())

@@ -21,6 +21,13 @@ from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
 
+def format_prometheus(counters: Dict[str, float]) -> str:
+    """Render a ``counters()`` dict in Prometheus text format — the one
+    formatter every exporter (telemetry, controller, cluster) shares."""
+    return "\n".join(f"{name} {value:.6g}"
+                     for name, value in counters.items()) + "\n"
+
+
 @dataclass
 class TenantObs:
     """One control interval's view of one tenant (units/s; units = bytes
@@ -95,6 +102,8 @@ class EngineTelemetry:
         return offered, deferred
 
     def update(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        """Sample the engine ledger at time ``now`` (seconds; defaults to
+        the wall clock) and return per-tenant ``TenantObs`` in bytes/s."""
         now = time.monotonic() if now is None else now
         offered, deferred = self._cumulative()
         if self._prev_t is None or now <= self._prev_t:
@@ -139,14 +148,23 @@ class EngineTelemetry:
         return out
 
     def export_prometheus(self) -> str:
-        return "\n".join(f"{name} {value:.6g}"
-                         for name, value in self.counters().items()) + "\n"
+        return format_prometheus(self.counters())
 
 
 class SchedulerTelemetry:
-    """Same interface over a TenantScheduler: served tokens/s + queue depth."""
+    """Same interface over a TenantScheduler: served tokens/s + queue depth.
+
+    ``served_tokens`` is treated with Prometheus counter discipline: a
+    tenant whose cumulative counter *decreased* (or vanished) since the last
+    sample was exported/reset behind our back — live migration folds a
+    tenant's ledger out of the source scheduler mid-run — so its EWMA is
+    reset and the new counter value becomes the baseline instead of being
+    read as a hugely negative rate.
+    """
 
     def __init__(self, scheduler, alpha: float = 0.5):
+        """``scheduler``: a live TenantScheduler; ``alpha``: EWMA gain in
+        (0, 1] — 1.0 = no smoothing, use the raw per-interval rate."""
         self.scheduler = scheduler
         self.alpha = alpha
         self._prev_served: Dict[int, int] = {}
@@ -156,6 +174,9 @@ class SchedulerTelemetry:
         self.updates = 0
 
     def update(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
+        """Sample the scheduler's ledgers at time ``now`` (seconds; defaults
+        to the wall clock) and return per-tenant ``TenantObs`` in tokens/s
+        (rates) and tokens (queue depth)."""
         now = time.monotonic() if now is None else now
         served = dict(self.scheduler.served_tokens)
         queues = {t: float(self.scheduler.pending(t))
@@ -168,8 +189,14 @@ class SchedulerTelemetry:
         dt = now - self._prev_t
         self.obs = {}
         for t in set(served) | set(self._prev_served) | set(queues):
-            d = (served.get(t, 0) - self._prev_served.get(t, 0)) / dt
-            r = self._ewma.setdefault(t, _Ewma(self.alpha)).update(d)
+            raw = served.get(t, 0) - self._prev_served.get(t, 0)
+            if raw < 0 or (t not in served and t in self._prev_served):
+                # counter reset: the tenant was migrated/dropped; rebaseline
+                self._ewma.pop(t, None)
+                if t in served or t in queues:
+                    self.obs[t] = TenantObs(queue=queues.get(t, 0.0))
+                continue
+            r = self._ewma.setdefault(t, _Ewma(self.alpha)).update(raw / dt)
             q = queues.get(t, 0.0)
             self.obs[t] = TenantObs(rate=r, offered=r, queue=q)
         self._prev_served, self._prev_t = served, now
@@ -193,8 +220,7 @@ class SchedulerTelemetry:
         return out
 
     def export_prometheus(self) -> str:
-        return "\n".join(f"{name} {value:.6g}"
-                         for name, value in self.counters().items()) + "\n"
+        return format_prometheus(self.counters())
 
 
 def merge_obs(per_source: List[Dict[int, TenantObs]]) -> Dict[int, TenantObs]:

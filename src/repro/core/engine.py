@@ -100,6 +100,36 @@ class TokenBucket:
             self.capacity = float(burst)
             self.tokens = min(self.tokens, self.capacity)
 
+    # -- migration support -------------------------------------------------
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, float]:
+        """Return the bucket's transferable state: ``{rate, capacity,
+        tokens, updated}`` (units/s, units, units, seconds), settling the
+        balance at ``now`` first when given (``None`` keeps the last
+        settled level and its timestamp).
+
+        The enforcement-point half of live tenant migration: the level a
+        tenant has already burned down travels with it, so moving between
+        enforcement points can never reopen a fresh burst.
+        """
+        if now is not None:
+            self._refill(now)
+        return {"rate": self.rate, "capacity": self.capacity,
+                "tokens": self.tokens, "updated": self.updated}
+
+    @classmethod
+    def restore(cls, state: Dict[str, float],
+                now: Optional[float] = None) -> "TokenBucket":
+        """Rebuild a bucket from ``snapshot()`` output, anchored at ``now``
+        so refill resumes from the transfer instant. ``None`` keeps the
+        snapshot's own timestamp — the right choice when the caller's
+        clock is unknown (virtual-clock replays must NOT be anchored to
+        the wall clock, which would freeze refill forever)."""
+        b = cls(state["rate"], state["capacity"])
+        b.tokens = min(float(state["tokens"]), b.capacity)
+        b.updated = float(state.get("updated", 0.0)) if now is None \
+            else float(now)
+        return b
+
 
 ENFORCEMENT_MODES = ("off", "account", "defer")
 

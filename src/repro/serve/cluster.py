@@ -1,0 +1,438 @@
+"""EngineCluster: one controller, N ServeEngines, live tenant migration.
+
+The paper's operator owns the stack as *infrastructure*: many guests
+multiplex onto shared stack modules, and the operator can rebalance that
+mapping at will — including moving a tenant between modules without the
+guest noticing. This module is that placement power for the serving plane:
+
+  * N live ``ServeEngine``s (think: NSMs on different hosts) behind ONE
+    shared ``RateController``. The controller's water-fill runs over the
+    merged telemetry of every engine's scheduler — one tokens/s bottleneck
+    spanning the cluster — and splits each tenant's global allocation
+    across engines in proportion to where its traffic shows up.
+  * a tenant -> engine ``placement`` map the operator controls. New
+    tenants auto-place on the least-loaded engine; ``migrate`` moves a
+    live tenant mid-replay.
+
+Migration is drain-and-transfer, and conserves the served-token ledger:
+
+  1. the tenant's unserved queue, WFQ weight and token-bucket *level*
+     are exported from the source scheduler and imported at the
+     destination (a move can never reopen a fresh burst);
+  2. the source's cumulative ledger entries fold into the cluster-level
+     ``carried`` ledger, so the global view never jumps (telemetry on the
+     source sees a counter reset, not a negative rate);
+  3. in-flight slots are NOT moved: they finish — and bill — where they
+     were admitted; the tenant is ``draining`` until they run dry, then
+     the residual billing folds and the migration finalizes.
+
+``tenant_served_tokens`` (carried + live counters) therefore equals the
+request-level ground truth — sum of prompt+generated tokens over the
+tenant's completed and in-flight requests — at every instant, including
+across the migration window. ``assert_ledger_conservation`` checks exactly
+that (no lost tokens, no double-billing) and is invoked on every move.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from repro.control.telemetry import format_prometheus
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request
+
+_LEDGER_FIELDS = ("served_tokens", "admitted_requests", "deferred_polls",
+                  "admit_wait_sum")
+
+
+@dataclass
+class MigrationRecord:
+    """One migrate() call, for the operator's audit log."""
+
+    tenant: int
+    src: int                      # engine index the tenant left
+    dst: int                      # engine index it moved to
+    started_step: int             # cluster step count at the move
+    queued_moved: int             # unserved requests transferred
+    inflight_at_move: int         # slots left draining on the source
+    bucket_tokens_moved: float    # token-bucket level transferred (tokens)
+    finalized_step: int = -1      # -1 while the source is still draining
+
+    @property
+    def finalized(self) -> bool:
+        return self.finalized_step >= 0
+
+
+class ClusterLedger:
+    """Duck-types the ``TenantScheduler`` ledger surface over a cluster.
+
+    ``TraceReplayer`` (and anything else written against one scheduler's
+    ledgers) reads per-tenant counters through this facade and sees the
+    cluster-global view: carried (migrated-away) history plus the live
+    counters of every engine, so a tenant's numbers are continuous across
+    migrations.
+    """
+
+    def __init__(self, cluster: "EngineCluster"):
+        self._cluster = cluster
+
+    @property
+    def queues(self) -> Dict[int, int]:
+        """Known tenants (tenant -> engine index) — membership view."""
+        return dict(self._cluster.placement)
+
+    def add_tenant(self, tenant_id: int, weight: float = 1.0, **kw):
+        self._cluster.add_tenant(tenant_id, weight=weight)
+
+    def set_weight(self, tenant_id: int, weight: float):
+        self._cluster.set_weight(tenant_id, weight)
+
+    def pending(self, tenant_id: Optional[int] = None) -> int:
+        return sum(e.scheduler.pending(tenant_id)
+                   for e in self._cluster.engines)
+
+    @property
+    def served_tokens(self) -> Dict[int, int]:
+        return self._cluster.merged_ledger("served_tokens")
+
+    @property
+    def admitted_requests(self) -> Dict[int, int]:
+        return self._cluster.merged_ledger("admitted_requests")
+
+    @property
+    def deferred_polls(self) -> Dict[int, int]:
+        return self._cluster.merged_ledger("deferred_polls")
+
+    @property
+    def admit_wait_sum(self) -> Dict[int, float]:
+        return self._cluster.merged_ledger("admit_wait_sum")
+
+    def ledger(self) -> Dict[int, Dict[str, float]]:
+        """Cluster-global version of ``TenantScheduler.ledger``."""
+        served = self.served_tokens
+        admitted = self.admitted_requests
+        deferred = self.deferred_polls
+        waits = self.admit_wait_sum
+        out: Dict[int, Dict[str, float]] = {}
+        for t in set(served) | set(admitted) | set(deferred):
+            adm = admitted.get(t, 0)
+            out[t] = {
+                "served_tokens": float(served.get(t, 0)),
+                "admitted_requests": float(adm),
+                "deferred_polls": float(deferred.get(t, 0)),
+                "queued": float(self.pending(t)),
+                "mean_admit_wait_s": (waits.get(t, 0.0) / adm
+                                      if adm else 0.0),
+            }
+        return out
+
+
+class EngineCluster:
+    """N ServeEngines + one shared RateController + operator placement.
+
+    Exposes the same driving surface as a single ``ServeEngine`` (``B``,
+    ``submit``, ``step``, ``completed``, ``decode_steps``, ``scheduler``,
+    ``controller``) so ``TraceReplayer`` runs a cluster unchanged.
+
+    Args:
+        engines: live ServeEngines. Their own ``controller`` hooks must be
+            unset — the cluster drives the shared controller itself (one
+            tick for the whole cluster per control interval, not one per
+            engine).
+        controller: the shared ``RateController`` (capacity in tokens/s =
+            the ONE bottleneck spanning all engines). Any engine scheduler
+            not yet attached to it is attached here.
+        control_every: controller tick period, in cluster steps.
+    """
+
+    def __init__(self, engines: Sequence[ServeEngine], controller=None,
+                 *, control_every: int = 4):
+        self.engines: List[ServeEngine] = list(engines)
+        if not self.engines:
+            raise ValueError("EngineCluster needs at least one engine")
+        for e in self.engines:
+            if e.controller is not None:
+                raise ValueError(
+                    "cluster engines must not own a controller; the "
+                    "cluster ticks the shared one")
+        self.controller = controller
+        if controller is not None:
+            attached = {id(s) for s, _ in controller._schedulers}
+            for e in self.engines:
+                if id(e.scheduler) not in attached:
+                    controller.attach_scheduler(e.scheduler)
+        self.control_every = max(int(control_every), 1)
+        self.placement: Dict[int, int] = {}
+        self.draining: Dict[int, int] = {}          # tenant -> src engine
+        self.migration_log: List[MigrationRecord] = []
+        self.migrations_started = 0
+        self.migrations_completed = 0
+        self.completed: List[Request] = []
+        self._seen_completed = [len(e.completed) for e in self.engines]
+        self.steps = 0
+        self._carried: Dict[str, Dict[int, float]] = \
+            {f: {} for f in _LEDGER_FIELDS}
+        self.scheduler = ClusterLedger(self)
+
+    # -- engine-like surface ------------------------------------------------
+    @property
+    def B(self) -> int:
+        """Total decode slots across the cluster."""
+        return sum(e.B for e in self.engines)
+
+    @property
+    def decode_steps(self) -> int:
+        return sum(e.decode_steps for e in self.engines)
+
+    def submit(self, req: Request) -> int:
+        """Route one request to its tenant's placed engine (auto-placing
+        an unknown tenant on the least-loaded one). Returns the engine
+        index it landed on."""
+        idx = self.placement.get(req.tenant_id)
+        if idx is None:
+            idx = self.add_tenant(req.tenant_id)
+        self.engines[idx].submit(req)
+        return idx
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One cluster step: tick the shared controller (every
+        ``control_every`` steps), step every engine once, collect
+        completions, finalize any drained migrations. Returns the number
+        of active slots cluster-wide."""
+        self.steps += 1
+        if self.controller is not None and \
+                self.steps % self.control_every == 0:
+            self.controller.tick(time.monotonic() if now is None else now)
+        active = 0
+        for e in self.engines:
+            active += e.step(now=now)
+        self._collect_completed()
+        self._poll_drains()
+        return active
+
+    # -- placement ----------------------------------------------------------
+    def add_tenant(self, tenant_id: int, weight: float = 1.0,
+                   engine: Optional[int] = None) -> int:
+        """Register (or re-weight) a tenant. ``engine`` pins the placement
+        of a NEW tenant; None auto-places on the least-loaded engine.
+        Returns the engine index the tenant lives on. Re-placing an
+        existing tenant is ``migrate``'s job — passing a different
+        ``engine`` for one raises instead of silently ignoring the pin."""
+        if tenant_id in self.placement:
+            idx = self.placement[tenant_id]
+            if engine is not None and engine != idx:
+                raise ValueError(
+                    f"tenant {tenant_id} is already placed on engine "
+                    f"{idx}; use migrate({tenant_id}, {engine}) to move "
+                    f"a live tenant")
+            self.engines[idx].scheduler.set_weight(tenant_id, weight)
+            return idx
+        idx = engine if engine is not None else self._auto_place()
+        if not 0 <= idx < len(self.engines):
+            raise IndexError(f"engine {idx} not in cluster")
+        self.placement[tenant_id] = idx
+        self.engines[idx].scheduler.add_tenant(tenant_id, weight=weight)
+        return idx
+
+    def set_weight(self, tenant_id: int, weight: float) -> None:
+        self.add_tenant(tenant_id, weight=weight)
+
+    def _auto_place(self) -> int:
+        def load(k: int):
+            placed = sum(1 for v in self.placement.values() if v == k)
+            return (self.engine_load(k), placed, k)
+        return min(range(len(self.engines)), key=load)
+
+    def engine_load(self, k: int) -> float:
+        """Demand pressure on engine ``k``: queued + in-flight requests."""
+        e = self.engines[k]
+        return float(e.scheduler.pending() + e.inflight())
+
+    def hottest_engine(self) -> int:
+        return max(range(len(self.engines)),
+                   key=lambda k: (self.engine_load(k), -k))
+
+    def coolest_engine(self) -> int:
+        return min(range(len(self.engines)),
+                   key=lambda k: (self.engine_load(k), k))
+
+    # -- migration ----------------------------------------------------------
+    def migrate(self, tenant: int, dst_engine: int,
+                *, now: Optional[float] = None) -> Optional[MigrationRecord]:
+        """Move a live tenant to ``dst_engine`` mid-run, conserving its
+        ledger.
+
+        Transfers the unserved queue, WFQ weight and token-bucket level to
+        the destination immediately; folds the source's cumulative counters
+        into the cluster ledger; leaves in-flight slots draining on the
+        source (they finish and bill there). Delta-push history for the
+        tenant is invalidated so the controller re-pushes fresh rates to
+        every enforcement point next tick. Returns the ``MigrationRecord``
+        (None if the tenant is already on ``dst_engine``).
+        """
+        if tenant not in self.placement:
+            raise KeyError(f"tenant {tenant} is not placed on this cluster")
+        if tenant in self.draining:
+            raise RuntimeError(
+                f"tenant {tenant} is still draining from a previous "
+                f"migration; wait for it to finalize")
+        src = self.placement[tenant]
+        dst = int(dst_engine)
+        if not 0 <= dst < len(self.engines):
+            raise IndexError(f"engine {dst} not in cluster")
+        if dst == src:
+            return None
+        src_eng, dst_eng = self.engines[src], self.engines[dst]
+        # validate the destination BEFORE the destructive export: failing
+        # after export_tenant would lose the unserved queue it returned
+        if tenant in dst_eng.scheduler.queues:
+            raise ValueError(
+                f"tenant {tenant} is already active on engine {dst} "
+                f"(out-of-band submission?); migration requires a "
+                f"quiesced destination")
+        total_before = self.tenant_served_tokens(tenant)
+        inflight = src_eng.inflight(tenant)
+        state = src_eng.scheduler.export_tenant(tenant, now)
+        self._fold(tenant, state)
+        dst_eng.scheduler.import_tenant(tenant, state, now)
+        self.placement[tenant] = dst
+        if self.controller is not None:
+            self.controller.invalidate_tenant(tenant)
+        rec = MigrationRecord(
+            tenant=tenant, src=src, dst=dst, started_step=self.steps,
+            queued_moved=len(state["queue"]), inflight_at_move=inflight,
+            bucket_tokens_moved=(state["bucket"] or {}).get("tokens", 0.0))
+        self.migrations_started += 1
+        self.migration_log.append(rec)
+        # the move itself bills nothing: the global ledger must not jump
+        total_after = self.tenant_served_tokens(tenant)
+        if total_after != total_before:
+            raise AssertionError(
+                f"migration changed tenant {tenant}'s served-token ledger: "
+                f"{total_before} -> {total_after}")
+        self.assert_ledger_conservation(tenant)
+        if inflight:
+            self.draining[tenant] = src
+        else:
+            self._finalize(rec)
+        return rec
+
+    def rebalance(self, *, tenant: Optional[int] = None,
+                  now: Optional[float] = None) -> Optional[MigrationRecord]:
+        """Operator one-shot: move a tenant off the hottest engine onto the
+        coolest. Default victim is the hottest engine's most-backlogged
+        tenant (by queue depth — under an adversarial trace, the hog).
+        No-op (returns None) if the cluster is already balanced."""
+        hot, cool = self.hottest_engine(), self.coolest_engine()
+        if hot == cool:
+            return None
+        if tenant is None:
+            on_hot = [t for t, k in self.placement.items()
+                      if k == hot and t not in self.draining]
+            if not on_hot:
+                return None
+            sched = self.engines[hot].scheduler
+            tenant = max(on_hot, key=lambda t: (sched.pending(t), -t))
+        return self.migrate(tenant, cool, now=now)
+
+    def _fold(self, tenant: int, state: Dict) -> None:
+        for f in _LEDGER_FIELDS:
+            c = self._carried[f]
+            c[tenant] = c.get(tenant, 0) + state.get(f, 0)
+
+    def _finalize(self, rec: MigrationRecord) -> None:
+        rec.finalized_step = self.steps
+        self.migrations_completed += 1
+        self.assert_ledger_conservation(rec.tenant)
+
+    def _poll_drains(self) -> None:
+        for tenant, src in list(self.draining.items()):
+            src_eng = self.engines[src]
+            if src_eng.inflight(tenant):
+                continue
+            # in-flight work finished on the source: fold its residual
+            # billing (decode tokens accrued since the move) and finalize
+            residual = src_eng.scheduler.export_tenant(tenant)
+            if residual["queue"]:
+                raise AssertionError(
+                    f"tenant {tenant} grew a queue on drained source "
+                    f"engine {src}: routing leaked past the placement map")
+            self._fold(tenant, residual)
+            del self.draining[tenant]
+            rec = next(r for r in reversed(self.migration_log)
+                       if r.tenant == tenant)
+            self._finalize(rec)
+
+    def _collect_completed(self) -> None:
+        for k, e in enumerate(self.engines):
+            if len(e.completed) > self._seen_completed[k]:
+                self.completed.extend(e.completed[self._seen_completed[k]:])
+                self._seen_completed[k] = len(e.completed)
+
+    # -- cluster-global ledger ----------------------------------------------
+    def merged_ledger(self, fld: str) -> Dict[int, float]:
+        """Carried (migrated-away) history + live per-engine counters for
+        one ledger field — the continuous cluster-global view."""
+        if fld not in _LEDGER_FIELDS:
+            raise KeyError(f"unknown ledger field {fld!r}")
+        out = dict(self._carried[fld])
+        for e in self.engines:
+            for t, v in getattr(e.scheduler, fld).items():
+                out[t] = out.get(t, 0) + v
+        return out
+
+    def tenant_served_tokens(self, tenant: int) -> float:
+        """Tokens billed to a tenant cluster-wide, continuous across
+        migrations (carried + live engine counters)."""
+        return self._carried["served_tokens"].get(tenant, 0) + sum(
+            e.scheduler.served_tokens.get(tenant, 0) for e in self.engines)
+
+    def tenant_billed_ground_truth(self, tenant: int) -> int:
+        """Request-level ground truth: prompt+generated tokens over the
+        tenant's completed and in-flight requests. The billing scheme
+        (admit bills prompt + first prefill token, each decode step bills
+        the token it produced) makes this equal the ledger at all times."""
+        self._collect_completed()
+        total = sum(len(r.prompt) + len(r.generated)
+                    for r in self.completed if r.tenant_id == tenant)
+        for e in self.engines:
+            for s in e.slots:
+                if s.active and s.req.tenant_id == tenant:
+                    total += len(s.req.prompt) + len(s.req.generated)
+        return total
+
+    def assert_ledger_conservation(self, tenant: int) -> None:
+        """No lost tokens, no double-billing: the cluster ledger must equal
+        the request-level ground truth exactly."""
+        ledger = self.tenant_served_tokens(tenant)
+        truth = self.tenant_billed_ground_truth(tenant)
+        if int(round(ledger)) != truth:
+            raise AssertionError(
+                f"tenant {tenant} ledger broke conservation: ledger says "
+                f"{ledger} tokens, requests account for {truth}")
+
+    # -- reporting ----------------------------------------------------------
+    def counters(self) -> Dict[str, float]:
+        """Placement/migration counters (Prometheus naming), merged with
+        the shared controller's."""
+        out: Dict[str, float] = {
+            "nk_cluster_engines": float(len(self.engines)),
+            "nk_cluster_steps_total": float(self.steps),
+            "nk_migrations_started_total": float(self.migrations_started),
+            "nk_migrations_completed_total":
+                float(self.migrations_completed),
+            "nk_migrations_draining": float(len(self.draining)),
+        }
+        for t, k in sorted(self.placement.items()):
+            out[f'nk_placement{{tenant="{t}"}}'] = float(k)
+        for k, e in enumerate(self.engines):
+            out[f'nk_engine_load{{engine="{k}"}}'] = self.engine_load(k)
+            out[f'nk_engine_decode_steps_total{{engine="{k}"}}'] = \
+                float(e.decode_steps)
+        if self.controller is not None:
+            out.update(self.controller.counters())
+        return out
+
+    def export_prometheus(self) -> str:
+        return format_prometheus(self.counters())

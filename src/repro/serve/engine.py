@@ -41,6 +41,13 @@ class ServeEngine:
                  *, batch_slots: int = 8, max_seq: int = 256,
                  scheduler: Optional[TenantScheduler] = None, key=None,
                  controller=None, control_every: int = 4):
+        """``batch_slots``: concurrent decode slots (the shared resource);
+        ``max_seq``: KV-cache length in tokens; ``params``: share another
+        engine's weights (the shared-memory story — cluster replicas pass
+        the first engine's) or None to init fresh; ``controller``:
+        optional management-plane hook ticked every ``control_every``
+        steps (must be None when the engine joins an EngineCluster, which
+        ticks the shared controller itself)."""
         self.cfg, self.rcfg, self.mesh = cfg, rcfg, mesh
         self.B, self.max_seq = batch_slots, max_seq
         self.shd = ShardingCtx(mesh)
@@ -77,7 +84,19 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Queue one request for admission (delegates to the scheduler)."""
         self.scheduler.submit(req)
+
+    def inflight(self, tenant_id: Optional[int] = None) -> int:
+        """Active decode slots held by one tenant (or all, if None).
+
+        The drain signal for live migration: a tenant has left this engine
+        once its queue was exported *and* its in-flight slots ran dry —
+        in-flight requests finish (and bill) where they were admitted, so
+        no token is ever lost or moved mid-generation.
+        """
+        return sum(1 for s in self.slots if s.active and
+                   (tenant_id is None or s.req.tenant_id == tenant_id))
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -166,6 +185,8 @@ class ServeEngine:
 
     # -- utilization metrics ------------------------------------------------
     def slot_utilization(self) -> float:
+        """Fraction of slot-steps that produced a token (1.0 = no idle
+        slots across the run)."""
         if not self.decode_steps:
             return 0.0
         served = sum(len(r.generated) for r in self.completed)

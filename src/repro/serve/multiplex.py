@@ -135,8 +135,24 @@ def paper_table2_analog(n_tenants: int = 16, seed: int = 0,
 
 
 def jain_index(xs: Sequence[float]) -> float:
-    """Jain's fairness index: 1.0 = perfectly equal, 1/n = one hog."""
-    xs = [float(x) for x in xs]
+    """Jain's fairness index: 1.0 = perfectly equal, 1/n = one hog.
+
+    ``xs``: per-tenant rates (any shared unit — tokens/s, bytes/s).
+    Degenerate idle intervals are *defined* as perfectly fair: an empty or
+    all-zero vector returns 1.0, and non-finite entries (the NaN a 0/0
+    rate computation produces for an idle tenant) are treated as 0.0
+    instead of poisoning the index into NaN.
+
+    >>> jain_index([2.0, 2.0, 2.0])
+    1.0
+    >>> jain_index([0.0, 0.0, 0.0])
+    1.0
+    >>> jain_index([])
+    1.0
+    >>> round(jain_index([float("nan"), 3.0]), 3)
+    0.5
+    """
+    xs = [float(x) if math.isfinite(x) else 0.0 for x in xs]
     n = len(xs)
     sq = sum(x * x for x in xs)
     if n == 0 or sq <= 0:

@@ -23,6 +23,11 @@ All metrics are read from real ledgers, never from the model:
 The scheduler runs with ``charge_prompt=True`` so bucket pricing, telemetry
 observation and the served-token ledger share one unit and the controller's
 ``capacity`` is directly comparable to measured rates.
+
+The same replayer drives a multi-engine ``EngineCluster`` (N ServeEngines,
+one shared controller, operator-controlled placement) unchanged — see
+``make_replay_cluster`` and the ``migration`` scenario, where a live
+tenant migration lands mid-replay via ``run(events=...)``.
 """
 from __future__ import annotations
 
@@ -52,7 +57,12 @@ class TenantReport:
 
 @dataclass
 class ReplayReport:
-    """Everything a fairness claim needs, measured on the real datapath."""
+    """Everything a fairness claim needs, measured on the real datapath.
+
+    ``engines``/``migrations``/``placement`` surface the cluster view when
+    the replay drove an ``EngineCluster``: how many engines shared the
+    bottleneck, how many live migrations finalized inside this window, and
+    where each tenant ended up (tenant -> engine index)."""
 
     duration_s: float
     capacity: float               # enforced bottleneck, tokens/s
@@ -60,6 +70,9 @@ class ReplayReport:
     decode_steps: int
     set_rate_calls: int = 0
     push_skipped: int = 0
+    engines: int = 1
+    migrations: int = 0
+    placement: Optional[Dict[int, int]] = None
 
     def rates(self) -> Dict[int, float]:
         return {t: r.achieved_rate for t, r in self.per_tenant.items()}
@@ -110,7 +123,24 @@ TOKENS_PER_REQUEST = PROMPT_LEN + MAX_NEW_TOKENS
 
 
 class TraceReplayer:
-    """Drives one ServeEngine through a Trace on a virtual clock."""
+    """Drives a ServeEngine — or a whole EngineCluster — through a Trace
+    on a virtual clock.
+
+    Args:
+        engine: a live ``ServeEngine`` or ``EngineCluster`` (anything with
+            the engine driving surface: ``B``, ``submit``, ``step``,
+            ``completed``, ``decode_steps``, ``scheduler``,
+            ``controller``). A cluster's ledger facade makes per-tenant
+            counters continuous across live migrations.
+        capacity: the enforced bottleneck in tokens/s (the controller's
+            capacity — cluster-wide when driving a cluster).
+        interval_s: seconds of virtual time per trace interval.
+        prompt_len / max_new_tokens: request shape in tokens.
+        headroom: raw engine throughput as a multiple of ``capacity``; > 1
+            keeps the management plane, not the slots, the binding
+            constraint.
+        weights: per-tenant WFQ weights (dimensionless), default 1.0.
+    """
 
     def __init__(self, engine, *, capacity: float,
                  interval_s: float = 1.0, prompt_len: int = PROMPT_LEN,
@@ -138,10 +168,15 @@ class TraceReplayer:
             max_new_tokens=self.max_new_tokens, req_id=self._req_id,
             arrival=now))
 
-    def run(self, trace: Trace, *, unit: str = "requests") -> ReplayReport:
+    def run(self, trace: Trace, *, unit: str = "requests",
+            events: Optional[Sequence] = None) -> ReplayReport:
         """Replay ``trace`` (per-tenant loads per interval). ``unit`` is
         what a load value means: "requests" (requests/s, the multiplexing
-        vocabulary) or "tokens" (tokens/s, divided by request cost)."""
+        vocabulary) or "tokens" (tokens/s, divided by request cost).
+
+        ``events``: optional sequence of ``(interval_index, fn)`` operator
+        actions; ``fn(engine, now)`` runs at the start of that (0-based)
+        interval — how a live migration lands mid-replay."""
         loads = np.asarray(trace.loads, float)
         if unit == "tokens":
             loads = loads / self.tokens_per_request
@@ -164,9 +199,20 @@ class TraceReplayer:
         calls0 = getattr(ctrl, "push_calls", 0)
         skip0 = getattr(ctrl, "push_skipped", 0)
         steps0 = self.engine.decode_steps
+        migrations0 = getattr(self.engine, "migrations_completed", 0)
 
+        ev: Dict[int, list] = {}
+        for idx, fn in (events or ()):
+            if not 0 <= int(idx) < T:
+                # a silently dropped event breaks the scenario's contract
+                # (e.g. "includes a live migration") in confusing ways
+                raise ValueError(f"event interval {idx} out of range for a "
+                                 f"{T}-interval trace")
+            ev.setdefault(int(idx), []).append(fn)
         frac = np.zeros(n)
         for t in range(T):
+            for fn in ev.get(t, ()):
+                fn(self.engine, self._vt)
             interval_end = self._vt + self.interval_s
             for i in range(n):
                 want = loads[i, t] * self.interval_s + frac[i]
@@ -199,12 +245,17 @@ class TraceReplayer:
                 mean_admit_wait_s=wait / adm if adm else 0.0,
                 weight=self.weights.get(i, 1.0),
             )
+        placement = getattr(self.engine, "placement", None)
         return ReplayReport(
             duration_s=duration, capacity=self.capacity,
             per_tenant=per_tenant,
             decode_steps=self.engine.decode_steps - steps0,
             set_rate_calls=getattr(ctrl, "push_calls", 0) - calls0,
             push_skipped=getattr(ctrl, "push_skipped", 0) - skip0,
+            engines=len(getattr(self.engine, "engines", ())) or 1,
+            migrations=getattr(self.engine, "migrations_completed", 0)
+            - migrations0,
+            placement=dict(placement) if placement is not None else None,
         )
 
 
@@ -238,6 +289,47 @@ def make_replay_engine(*, capacity: float, batch_slots: int = 4,
     return eng
 
 
+def make_replay_cluster(*, capacity: float, engines: int = 3,
+                        batch_slots: int = 4, max_seq: int = 32,
+                        control_every: int = 4, push_mode: str = "full",
+                        delta_tol: float = 0.05, model: str = "llama3.2-3b",
+                        weights=None, mesh=None):
+    """N smoke-scale ServeEngines behind ONE shared RateController — the
+    multi-engine fabric the e2e scenarios drive.
+
+    ``capacity`` is the single tokens/s bottleneck spanning the whole
+    cluster (the controller splits each tenant's allocation across engines
+    by observed demand). Engine replicas share model weights and the
+    compiled prefill/decode, so a cluster costs one compilation.
+    """
+    from repro.configs import RunConfig, get_smoke_config
+    from repro.control.controller import RateController
+    from repro.launch.mesh import make_single_device_mesh
+    from repro.serve.cluster import EngineCluster
+    from repro.serve.engine import ServeEngine
+
+    mesh = mesh if mesh is not None else make_single_device_mesh()
+    ctrl = RateController(capacity, weights=weights, alpha=0.6,
+                          push_mode=push_mode, delta_tol=delta_tol)
+    cfg = get_smoke_config(model)
+    rcfg = RunConfig(attn_q_block=16, attn_kv_block=16)
+    engs = []
+    for _ in range(int(engines)):
+        sched = TenantScheduler(policy="wfq", charge_prompt=True)
+        eng = ServeEngine(cfg, rcfg, mesh,
+                          params=engs[0].params if engs else None,
+                          batch_slots=batch_slots, max_seq=max_seq,
+                          scheduler=sched, controller=None)
+        if engs:
+            # identical config and cache shapes: replicas reuse the first
+            # engine's jitted prefill/decode (tenants already share the
+            # weights — the shared-memory story — so the cluster also
+            # shares one compiled stack and compiles once)
+            eng._prefill, eng._decode = engs[0]._prefill, engs[0]._decode
+        engs.append(eng)
+    return EngineCluster(engs, ctrl, control_every=control_every)
+
+
 def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
                   capacity: Optional[float] = None, seed: int = 0):
     """(trace, enforced capacity) for one named scenario — the single
@@ -255,7 +347,11 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
         trace = mx.steady_trace(n_tenants, intervals, rps=3.0)
         demand = 3.0 * per_req * n_tenants
         cap = capacity or demand * 0.7            # mild, stable contention
-    elif name == "adversarial":
+    elif name in ("adversarial", "migration"):
+        # one spec, two drivers: "migration" is the same adversarial fleet
+        # but on a multi-engine cluster, with a mid-window rebalance (a
+        # live migration the Jain/isolation bounds must survive) — sharing
+        # the branch keeps its hog-free baseline comparable by design
         trace = mx.adversarial_trace(n_tenants, intervals, base=1.0,
                                      hog_factor=10.0)
         cap = capacity or 1.0 * per_req * (n_tenants + 3)
@@ -273,7 +369,7 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
         cap = capacity or float(trace.loads.sum(axis=0).mean()) * per_req * 0.7
     else:
         raise KeyError(f"unknown scenario {name!r}; "
-                       f"have {sorted(mx.TRACES)} ")
+                       f"have {sorted(mx.TRACES) + ['migration']}")
     return trace, cap
 
 
@@ -291,12 +387,34 @@ def adversarial_baseline(trace: Trace) -> Trace:
 def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                     capacity: Optional[float] = None, engine=None,
                     push_mode: str = "full", weights=None,
-                    seed: int = 0) -> ReplayReport:
-    """Run one named scenario end-to-end and return the measured report."""
+                    seed: int = 0, engines: int = 1) -> ReplayReport:
+    """Run one named scenario end-to-end and return the measured report.
+
+    ``engines`` > 1 drives an ``EngineCluster`` (N ServeEngines behind one
+    shared controller) instead of a single engine. The ``migration``
+    scenario requires a cluster: mid-window the operator rebalances the
+    hottest engine, so the report includes at least one live migration.
+    """
+    # fail fast, before any engine construction (jit compiles are minutes)
+    needs_cluster = name == "migration"
+    if needs_cluster and (engines < 2 if engine is None
+                          else not hasattr(engine, "rebalance")):
+        raise ValueError("the migration scenario needs a cluster: "
+                         "pass engines >= 2 (or an EngineCluster)")
     trace, cap = scenario_spec(name, n_tenants=n_tenants,
                                intervals=intervals, capacity=capacity,
                                seed=seed)
-    eng = engine if engine is not None else \
-        make_replay_engine(capacity=cap, push_mode=push_mode, weights=weights)
+    eng = engine
+    if eng is None:
+        if engines > 1:
+            eng = make_replay_cluster(capacity=cap, engines=engines,
+                                      push_mode=push_mode, weights=weights)
+        else:
+            eng = make_replay_engine(capacity=cap, push_mode=push_mode,
+                                     weights=weights)
+    events = None
+    if needs_cluster:
+        events = [(max(intervals // 2, 1),
+                   lambda e, now: e.rebalance(now=now))]
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
-    return rep.run(trace)
+    return rep.run(trace, events=events)

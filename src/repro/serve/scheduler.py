@@ -62,6 +62,9 @@ class TenantScheduler:
     def add_tenant(self, tenant_id: int, weight: float = 1.0,
                    rate_tokens_per_s: Optional[float] = None,
                    burst: Optional[float] = None):
+        """Register a tenant: WFQ ``weight`` (dimensionless share), optional
+        admission cap ``rate_tokens_per_s`` with ``burst`` in tokens
+        (defaults to 1 s worth of rate). Resets any existing state."""
         self.queues[tenant_id] = deque()
         self.weights[tenant_id] = weight
         self.vtime[tenant_id] = 0.0
@@ -104,6 +107,8 @@ class TenantScheduler:
                 b.capacity = max(b.capacity, float(rate_tokens_per_s))
 
     def set_weight(self, tenant_id: int, weight: float):
+        """Set a tenant's WFQ weight (dimensionless; 2.0 = twice the decode
+        share of a weight-1.0 tenant), registering it if unknown."""
         if tenant_id not in self.queues:
             self.add_tenant(tenant_id, weight=weight)
         self.weights[tenant_id] = weight
@@ -127,12 +132,64 @@ class TenantScheduler:
         if tenant_id in self._rr_order:
             self._rr_order.remove(tenant_id)
 
+    # -- migration ----------------------------------------------------------
+    def export_tenant(self, tenant_id: int,
+                      now: Optional[float] = None) -> Dict:
+        """Atomically remove a tenant and return its transferable state.
+
+        The source half of live migration. Returns a dict with the tenant's
+        unserved ``queue`` (list of Requests, FIFO order), ``weight``,
+        ``bucket`` (a ``TokenBucket.snapshot`` settled at ``now``, or None
+        if uncapped) and its cumulative ledger entries (``served_tokens``
+        [tokens], ``admitted_requests``, ``deferred_polls``,
+        ``admit_wait_sum`` [s]). The ledger entries are for the *operator*
+        to carry — ``import_tenant`` deliberately does not replay them into
+        the destination, where a sudden counter jump would read as a rate
+        spike to telemetry.
+        """
+        state = {
+            "queue": list(self.queues.get(tenant_id, ())),
+            "weight": self.weights.get(tenant_id, 1.0),
+            "bucket": (self.buckets[tenant_id].snapshot(now)
+                       if tenant_id in self.buckets else None),
+            "served_tokens": self.served_tokens.get(tenant_id, 0),
+            "admitted_requests": self.admitted_requests.get(tenant_id, 0),
+            "deferred_polls": self.deferred_polls.get(tenant_id, 0),
+            "admit_wait_sum": self.admit_wait_sum.get(tenant_id, 0.0),
+        }
+        self.drop_tenant(tenant_id)
+        return state
+
+    def import_tenant(self, tenant_id: int, state: Dict,
+                      now: Optional[float] = None) -> None:
+        """Install a migrated tenant from ``export_tenant`` state.
+
+        The unserved queue arrives in order; the bucket resumes at its
+        transferred token balance anchored at ``now`` (migration can never
+        reopen a fresh burst); the WFQ virtual time re-joins at the
+        destination's current minimum so the migrant competes fairly from
+        now instead of replaying a zero-vtime catch-up burst.
+        """
+        if tenant_id in self.queues:
+            raise ValueError(f"tenant {tenant_id} is already active here; "
+                             f"migration requires a quiesced destination")
+        self.add_tenant(tenant_id, weight=state.get("weight", 1.0))
+        self.queues[tenant_id].extend(state.get("queue", ()))
+        others = [v for t, v in self.vtime.items() if t != tenant_id]
+        self.vtime[tenant_id] = min(others) if others else 0.0
+        if state.get("bucket") is not None:
+            self.buckets[tenant_id] = TokenBucket.restore(
+                state["bucket"], now)
+
     def submit(self, req: Request):
+        """Enqueue one request; an unknown tenant is auto-registered at
+        weight 1.0 (uncapped until a controller pushes a rate)."""
         if req.tenant_id not in self.queues:
             self.add_tenant(req.tenant_id)
         self.queues[req.tenant_id].append(req)
 
     def pending(self, tenant_id: Optional[int] = None) -> int:
+        """Unadmitted queued requests for one tenant (or all, if None)."""
         if tenant_id is not None:
             return len(self.queues.get(tenant_id, ()))
         return sum(len(q) for q in self.queues.values())
@@ -185,12 +242,16 @@ class TenantScheduler:
 
     # -- accounting (engine reports completed work) -------------------------
     def account(self, tenant_id: int, tokens: int):
+        """Bill ``tokens`` (prompt and/or generated tokens — the unit the
+        buckets and telemetry share) to a tenant and advance its WFQ
+        virtual time by tokens/weight."""
         self.served_tokens[tenant_id] = \
             self.served_tokens.get(tenant_id, 0) + tokens
         w = max(self.weights.get(tenant_id, 1.0), 1e-9)
         self.vtime[tenant_id] = self.vtime.get(tenant_id, 0.0) + tokens / w
 
     def shares(self) -> Dict[int, float]:
+        """Each tenant's fraction of all tokens served so far (sums to 1)."""
         tot = max(sum(self.served_tokens.values()), 1)
         return {t: n / tot for t, n in self.served_tokens.items()}
 

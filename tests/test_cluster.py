@@ -1,0 +1,265 @@
+"""Multi-engine fabric: one controller, N ServeEngines, live migration.
+
+Tier-1 keeps the pure pieces (bucket/scheduler transfer, telemetry counter
+resets, delta-push invalidation, placement) plus ONE engine-stepping
+integration test of the drain-and-transfer path; the full adversarial
+migration scenarios are `slow` (see tests/test_replay.py).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.control.controller import RateController
+from repro.control.telemetry import SchedulerTelemetry
+from repro.core.engine import TokenBucket
+from repro.serve.multiplex import jain_index
+from repro.serve.replay import make_replay_cluster
+from repro.serve.scheduler import Request, TenantScheduler
+
+
+# ---------------------------------------------------------------------------
+# jain_index degenerate intervals (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_jain_index_defined_as_one_on_degenerate_idle_interval():
+    """Regression: an all-zero (or NaN-from-0/0) rate vector is a
+    degenerate idle interval — defined as perfectly fair, never NaN."""
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0, 0.0]) == 1.0
+    assert jain_index(np.zeros(4)) == 1.0
+    nan = float("nan")
+    assert jain_index([nan, nan, nan]) == 1.0     # idle 0/0 rates
+    assert math.isfinite(jain_index([nan, 3.0]))  # partial NaN: no poison
+    assert jain_index([nan, 3.0]) == pytest.approx(0.5)
+    assert jain_index([2.0, 2.0]) == 1.0          # non-degenerate untouched
+
+
+# ---------------------------------------------------------------------------
+# transferable state: bucket + scheduler export/import
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_snapshot_restore_preserves_level():
+    b = TokenBucket(10.0, 20.0)
+    assert b.consume(15.0, now=0.0)
+    snap = b.snapshot(now=1.0)                # settle: 5 + 10*1s = 15
+    assert snap["tokens"] == pytest.approx(15.0)
+    c = TokenBucket.restore(snap, now=1.0)
+    assert c.rate == 10.0 and c.capacity == 20.0
+    assert c.tokens == pytest.approx(15.0)    # the burn-down travelled
+    assert c.wait_time(20.0, now=1.0) == pytest.approx(0.5)
+
+
+def test_token_bucket_restore_without_now_keeps_virtual_clock():
+    """Regression: restore(now=None) must keep the snapshot's own
+    timestamp, never anchor to the wall clock — on a virtual clock that
+    would freeze refill forever (wall monotonic >> virtual seconds)."""
+    b = TokenBucket(10.0, 20.0)
+    assert b.consume(20.0, now=0.0)           # empty at virtual t=0
+    c = TokenBucket.restore(b.snapshot(), None)
+    assert c.updated == pytest.approx(0.0)    # snapshot's clock, not wall
+    # refill resumes on the virtual clock after the transfer
+    assert c.wait_time(10.0, now=1.0) == pytest.approx(0.0)
+
+
+def test_scheduler_export_import_roundtrip():
+    a = TenantScheduler(charge_prompt=True)
+    b = TenantScheduler(charge_prompt=True)
+    a.add_tenant(7, weight=2.0, rate_tokens_per_s=10.0, burst=20.0)
+    for k in range(3):
+        a.submit(Request(tenant_id=7, prompt=[1], max_new_tokens=3,
+                         req_id=k))
+    assert a.buckets[7].consume(15.0, now=0.0)
+    level = a.buckets[7].tokens
+    state = a.export_tenant(7, now=0.0)
+    # export is atomic: the source forgets everything
+    assert 7 not in a.queues and 7 not in a.buckets and 7 not in a.weights
+
+    b.add_tenant(1)
+    b.vtime[1] = 42.0
+    b.import_tenant(7, state, now=0.0)
+    assert [r.req_id for r in b.queues[7]] == [0, 1, 2]   # FIFO preserved
+    assert b.weights[7] == 2.0
+    assert b.buckets[7].tokens == pytest.approx(level)    # no fresh burst
+    assert b.vtime[7] == pytest.approx(42.0)  # re-join at dst min vtime
+    # importing onto an active tenant is refused
+    with pytest.raises(ValueError):
+        b.import_tenant(7, state)
+    # existed-then-dropped destination starts clean on re-import
+    b.drop_tenant(7)
+    b.import_tenant(7, state, now=1.0)
+    assert len(b.queues[7]) == 3
+
+
+def test_scheduler_telemetry_rebaselines_on_counter_reset():
+    """A tenant folded out of a scheduler mid-run (migration) must read as
+    a counter reset, not a hugely negative rate."""
+    s = TenantScheduler()
+    s.add_tenant(0)
+    tel = SchedulerTelemetry(s, alpha=1.0)
+    tel.update(now=0.0)
+    s.account(0, 100)
+    assert tel.update(now=1.0)[0].rate == pytest.approx(100.0)
+    s.export_tenant(0)                        # ledger folds out
+    obs = tel.update(now=2.0)
+    assert 0 not in obs or obs[0].rate == 0.0
+    s.add_tenant(0)                           # ...and the tenant returns
+    s.account(0, 10)
+    obs = tel.update(now=3.0)
+    assert obs[0].rate == pytest.approx(10.0)
+    assert obs[0].rate >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# delta-push invalidation (stale-rate regression, cluster scale)
+# ---------------------------------------------------------------------------
+
+
+def test_invalidate_tenant_clears_delta_history_for_all_points():
+    ctrl = RateController(10.0, push_mode="delta")
+    ctrl._last_push = {("scheduler", 0, 0): 1.0, ("scheduler", 1, 0): 2.0,
+                       ("engine", 0, 0): 4.0, ("scheduler", 0, 1): 3.0}
+    ctrl.invalidate_tenant(0)
+    assert ctrl._last_push == {("scheduler", 0, 1): 3.0}
+
+
+def test_delta_push_after_migration_lands_fresh_rate():
+    """PR 2's stale-rate regression at cluster scale: a tenant migrating
+    back to a scheduler it was dropped from must get a fresh push on the
+    next tick — delta mode must not judge the target 'unchanged'."""
+    a = TenantScheduler(charge_prompt=True)
+    b = TenantScheduler(charge_prompt=True)
+    ctrl = RateController(100.0, push_mode="delta", alpha=1.0)
+    ctrl.attach_scheduler(a)
+    ctrl.attach_scheduler(b)
+    a.add_tenant(0)
+    now = 0.0
+    ctrl.tick(now)                            # telemetry baseline
+    for _ in range(4):                        # steady serving on A
+        now += 1.0
+        a.account(0, 8)
+        a.submit(Request(tenant_id=0, prompt=[1], max_new_tokens=7))
+        ctrl.tick(now)
+    assert 0 in a.buckets and a.buckets[0].rate > 0
+
+    state = a.export_tenant(0, now=now)       # A -> B
+    b.import_tenant(0, state, now=now)
+    ctrl.invalidate_tenant(0)
+    now += 1.0
+    b.account(0, 8)
+    ctrl.tick(now)
+
+    state = b.export_tenant(0, now=now)       # B -> A (dropped-from) again
+    a.import_tenant(0, state, now=now)
+    ctrl.invalidate_tenant(0)
+    calls_before = ctrl.push_calls
+    now += 1.0
+    a.account(0, 8)
+    ctrl.tick(now)
+    # the push actually landed on A's enforcement point this tick...
+    assert ctrl.push_calls > calls_before
+    assert ("scheduler", 0, 0) in ctrl._last_push
+    # ...and the live bucket carries that fresh rate, not a stale one
+    assert 0 in a.buckets
+    assert a.buckets[0].rate == pytest.approx(
+        ctrl._last_push[("scheduler", 0, 0)])
+
+
+# ---------------------------------------------------------------------------
+# EngineCluster: placement + migration edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_auto_placement_spreads_and_routes():
+    cl = make_replay_cluster(capacity=50.0, engines=3, batch_slots=2)
+    for t in range(5):
+        cl.add_tenant(t)
+    counts = [list(cl.placement.values()).count(k) for k in range(3)]
+    assert max(counts) - min(counts) <= 1     # least-loaded spread
+    idx = cl.submit(Request(tenant_id=3, prompt=[1], max_new_tokens=2))
+    assert idx == cl.placement[3]
+    assert cl.engines[idx].scheduler.pending(3) == 1
+    # an unknown tenant auto-places on first submit
+    idx9 = cl.submit(Request(tenant_id=9, prompt=[1], max_new_tokens=2))
+    assert cl.placement[9] == idx9
+
+
+def test_migrate_zero_inflight_finalizes_immediately():
+    """Edge case: migrating a tenant with no in-flight requests transfers
+    queue + bucket level atomically and needs no drain window."""
+    cl = make_replay_cluster(capacity=50.0, engines=2, batch_slots=2)
+    cl.add_tenant(0, engine=0)
+    for k in range(4):
+        cl.submit(Request(tenant_id=0, prompt=[1, 2], max_new_tokens=4,
+                          req_id=k, arrival=0.0))
+    cl.engines[0].scheduler.set_rate(0, 25.0, now=0.0)
+    level = cl.engines[0].scheduler.buckets[0].tokens
+    rec = cl.migrate(0, 1, now=0.0)
+    assert rec.finalized and rec.inflight_at_move == 0
+    assert rec.queued_moved == 4
+    assert cl.migrations_completed == 1 and not cl.draining
+    assert cl.placement[0] == 1
+    assert [r.req_id for r in cl.engines[1].scheduler.queues[0]] == \
+        [0, 1, 2, 3]
+    assert cl.engines[1].scheduler.buckets[0].tokens == pytest.approx(level)
+    assert 0 not in cl.engines[0].scheduler.queues
+    cl.assert_ledger_conservation(0)
+    # migrating to where the tenant already lives is a no-op
+    assert cl.migrate(0, 1) is None
+    # a non-quiesced destination is rejected BEFORE the destructive
+    # export: the source must keep its queue intact
+    cl.add_tenant(5, engine=0)
+    cl.submit(Request(tenant_id=5, prompt=[1], max_new_tokens=2))
+    cl.engines[1].scheduler.add_tenant(5)     # out-of-band registration
+    with pytest.raises(ValueError):
+        cl.migrate(5, 1)
+    assert cl.engines[0].scheduler.pending(5) == 1
+    assert cl.placement[5] == 0
+
+
+def test_migrate_mid_burst_drains_bills_on_source_and_conserves():
+    """The drain-and-transfer path on live engines: in-flight slots finish
+    (and bill) on the source, the queue serves on the destination, and the
+    cluster ledger equals request-level ground truth throughout."""
+    cl = make_replay_cluster(capacity=60.0, engines=2, batch_slots=2,
+                             push_mode="delta")
+    cl.add_tenant(0, engine=0)
+    cl.add_tenant(1, engine=1)
+    vt = 0.0
+
+    def pump(n_steps, submit=True):
+        nonlocal vt
+        for _ in range(n_steps):
+            if submit:
+                for t in (0, 1):
+                    cl.submit(Request(tenant_id=t, prompt=[1, 2],
+                                      max_new_tokens=6, arrival=vt))
+            vt += 0.05
+            cl.step(now=vt)
+
+    pump(6)
+    assert cl.engines[0].inflight(0) > 0      # mid-burst
+    rec = cl.migrate(0, 1, now=vt)
+    assert rec.inflight_at_move > 0 and not rec.finalized
+    assert cl.draining == {0: 0}
+    with pytest.raises(RuntimeError):         # no re-migration mid-drain
+        cl.migrate(0, 0, now=vt)
+    steps = 0
+    while (cl.draining or cl.scheduler.pending(0)
+           or any(e.inflight(0) for e in cl.engines)) and steps < 600:
+        pump(1, submit=False)
+        steps += 1
+    assert not cl.draining and rec.finalized
+    assert cl.migrations_completed == 1
+    # conservation: cluster ledger == prompt+generated over all requests
+    cl.assert_ledger_conservation(0)
+    cl.assert_ledger_conservation(1)
+    # the facade view is continuous across the move (carried + live)
+    assert cl.scheduler.served_tokens[0] == cl.tenant_served_tokens(0)
+    # the migrated tenant kept serving — on the destination
+    assert cl.engines[1].scheduler.served_tokens.get(0, 0) > 0
+    # all 6 of tenant 0's requests completed despite the move
+    done0 = [r for r in cl.completed if r.tenant_id == 0]
+    assert len(done0) == 6

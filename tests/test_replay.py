@@ -12,7 +12,7 @@ import pytest
 from repro.serve.multiplex import Trace
 from repro.serve.replay import (
     TOKENS_PER_REQUEST, TraceReplayer, adversarial_baseline,
-    make_replay_engine, scenario_spec,
+    make_replay_cluster, make_replay_engine, replay_scenario, scenario_spec,
 )
 
 
@@ -122,6 +122,48 @@ def test_replay_work_conserving_backfill():
     assert off[1] > 1.25 * on1[1]
     # return phase: tenant 0 is served again at (near) its demand
     assert on2[0] > 0.8 * (4.0 * TOKENS_PER_REQUEST)
+
+
+@pytest.mark.slow
+def test_replay_migration_scenario_bounds_hold_across_move():
+    """The multi-engine scenario: 3 engines, one controller, the 10x hog
+    heats its engine and a mid-window rebalance migrates it live. Jain and
+    in-budget evenness must hold across the migration window."""
+    rep = replay_scenario("migration", n_tenants=4, intervals=16, engines=3)
+    assert rep.engines == 3
+    assert rep.migrations >= 1
+    assert rep.placement is not None and rep.placement[3] != 0
+    assert rep.jain() >= 0.95
+    # in-budget tenants (equal demand) stay even despite hog + migration
+    rates = [rep.per_tenant[t].achieved_rate for t in range(3)]
+    assert max(rates) / min(rates) < 1.05
+    # the migration scenario refuses to run without a cluster
+    with pytest.raises(ValueError):
+        replay_scenario("migration", n_tenants=4, intervals=4, engines=1)
+
+
+@pytest.mark.slow
+def test_replay_migrate_hog_mid_burst_conserves_ledger():
+    """Satellite edge case: migrating the hog itself mid-burst — a huge
+    unserved queue plus live in-flight slots — must conserve its
+    served-token ledger exactly (no loss, no double-billing)."""
+    trace, cap = scenario_spec("migration", n_tenants=4, intervals=14)
+    cl = make_replay_cluster(capacity=cap, engines=3)
+    recs = []
+
+    def ev(cluster, now):
+        recs.append(cluster.migrate(3, cluster.coolest_engine(), now=now))
+
+    rep = TraceReplayer(cl, capacity=cap).run(trace, events=[(7, ev)])
+    rec = recs[0]
+    assert rec is not None
+    assert rec.inflight_at_move > 0           # genuinely mid-burst
+    assert rec.queued_moved > 0               # the backlog travelled
+    assert rep.migrations == 1 and not cl.draining
+    cl.assert_ledger_conservation(3)
+    assert cl.tenant_served_tokens(3) == cl.tenant_billed_ground_truth(3)
+    # neighbours stayed isolated across the move
+    assert rep.jain() >= 0.95
 
 
 @pytest.mark.slow

@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Link-check the docs tree: every relative markdown link in README.md and
+docs/*.md must resolve to an existing file. Stdlib only (CI's docs job
+runs this before pip has installed anything heavy).
+
+Exit status 1 with a listing if any link is broken.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+# inline markdown links [text](target); images ![alt](target) match too
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def files_to_check():
+    docs = ROOT / "docs"
+    out = [ROOT / "README.md"]
+    if docs.is_dir():
+        out += sorted(docs.glob("*.md"))
+    return out
+
+
+def broken_links(md: pathlib.Path):
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:                     # pure intra-document anchor
+            continue
+        if not (md.parent / path).resolve().exists():
+            yield target
+
+
+def main() -> int:
+    checked, broken = 0, []
+    for md in files_to_check():
+        checked += 1
+        broken += [f"{md.relative_to(ROOT)}: {t}" for t in broken_links(md)]
+    if broken:
+        print("broken links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"checked {checked} markdown files; all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
