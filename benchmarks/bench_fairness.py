@@ -27,9 +27,25 @@ controller, operator-controlled placement) through the adversarial window
 with a live tenant migration mid-burst: claim (e) — Jain >= 0.95 and
 isolation < 5% must hold across the migration, and the migrated tenant's
 served-token ledger is conserved (no loss, no double-billing).
+
+``--e2e --engines N --autopilot`` closes the placement loop: claim (f) —
+on the ``consolidation`` scenario the PlacementController packs the idle
+fleet and parks >= 1 engine (cores saved > 0), waking it when load
+returns; claim (g) — on ``hotspot`` it auto-migrates the developing hog
+with Jain >= 0.95 and isolation < 5%, ledger conservation asserted on
+every applied plan on BOTH planes (serve tokens and collective bytes —
+the cluster runs with a bytes-plane CoreEngine per engine and synthetic
+collective traffic), and zero ping-pong moves under hysteresis.
+
+``--json OUT.json`` additionally writes every row, claim and verdict as a
+machine-readable document (the bench trajectory artifact CI uploads);
+``--smoke`` runs only the autopilot claims on a reduced trace (the CI
+bench-smoke job, gated by tools/check_bench.py against
+benchmarks/bench_thresholds.json).
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 from typing import Dict
@@ -270,29 +286,210 @@ def run_e2e_multi_engine(engines: int = 3) -> Dict:
 E2E = (run_e2e_convergence, run_e2e_isolation, run_e2e_delta_push)
 
 
-def main(argv=None) -> None:
-    argv = sys.argv[1:] if argv is None else argv
-    benches = list(E2E if "--e2e" in argv else ALL)
-    if "--engines" in argv:
-        if "--e2e" not in argv:
-            raise SystemExit("--engines only applies to the e2e suite: "
-                             "use --e2e --engines N")
-        i = argv.index("--engines")
-        if i + 1 >= len(argv):
-            raise SystemExit("--engines needs a value, e.g. "
-                             "--e2e --engines 3")
+# ---------------------------------------------------------------------------
+# Closed-loop placement (the autopilot claims)
+# ---------------------------------------------------------------------------
+
+
+def _autopilot_cluster(capacity, engines, policy):
+    """An N-engine replay cluster with the placement loop closed AND a
+    bytes-plane CoreEngine per engine, so every applied plan moves (and
+    conservation-checks) both planes."""
+    from repro.serve.replay import make_replay_cluster
+    return make_replay_cluster(capacity=capacity, engines=engines,
+                               autopilot=policy, core_plane=True)
+
+
+def _byte_pump(cluster, op_bytes=4096):
+    """(events, pumped) — per-interval synthetic collective traffic: each
+    tenant pushes one CommOp through its placed engine's CoreEngine, so
+    the bytes plane has live state for every migration to carry."""
+    from repro.core.nqe import CommOp
+
+    pumped: Dict[int, int] = {}
+
+    def pump(cl, now):
+        for t, k in sorted(cl.placement.items()):
+            ce = cl.core_engines[k]
+            op = CommOp(verb="psum", axes=("pod",), tenant_id=t,
+                        size_bytes=op_bytes)
+            ce.admit(op, now)
+            ce.route(op)
+            pumped[t] = pumped.get(t, 0) + op_bytes
+    return pump, pumped
+
+
+def _conservation_rows(prefix, cluster, pumped, n_tenants):
+    """Serve-plane ledger == request ground truth AND bytes-plane carried
+    + live == total pumped, for every tenant. Returns (rows, all_ok)."""
+    serve_ok = bytes_ok = True
+    for t in range(n_tenants):
         try:
-            n_eng = int(argv[i + 1])
+            cluster.assert_ledger_conservation(t)
+        except AssertionError:
+            serve_ok = False
+        if cluster.tenant_core_bytes(t) != pumped.get(t, 0):
+            bytes_ok = False
+    rows = [(f"{prefix},serve_ledger_conserved", 1.0 if serve_ok else 0.0),
+            (f"{prefix},bytes_ledger_conserved", 1.0 if bytes_ok else 0.0)]
+    return rows, serve_ok and bytes_ok
+
+
+def _ping_pong_free(cluster) -> float:
+    try:
+        cluster.autopilot.assert_no_ping_pong()
+        return 1.0
+    except AssertionError:
+        return 0.0
+
+
+def run_e2e_consolidation(engines: int = 3,
+                          intervals: int = E2E_INTERVALS) -> Dict:
+    """Claim (f): the closed placement loop consolidates an idle fleet.
+
+    Busy -> idle window -> busy. The ``consolidate`` policy packs the
+    idle tenants onto one engine and parks the rest (cores saved — the
+    paper's multiplexing claim, closed-loop), wakes them when load
+    returns, never ping-pongs a tenant, and conserves both planes'
+    ledgers on every applied plan.
+    """
+    from repro.serve.replay import TraceReplayer, scenario_spec
+    n = E2E_TENANTS
+    trace, cap = scenario_spec("consolidation", n_tenants=n,
+                               intervals=intervals)
+    cl = _autopilot_cluster(cap, engines, "consolidate")
+    pump, pumped = _byte_pump(cl)
+    events = [(i, pump) for i in range(intervals)]
+    rep = TraceReplayer(cl, capacity=cap).run(trace, events=events)
+    jain = rep.jain()
+    pp_free = _ping_pong_free(cl)
+    cons_rows, conserved = _conservation_rows("e2e_consolidation", cl,
+                                              pumped, n)
+    rows = [("e2e_consolidation,jain_index", jain),
+            ("e2e_consolidation,cores_saved", rep.cores_saved),
+            ("e2e_consolidation,max_parked", float(rep.max_parked)),
+            ("e2e_consolidation,autopilot_moves",
+             float(rep.autopilot_moves)),
+            ("e2e_consolidation,live_migrations", float(rep.migrations)),
+            ("e2e_consolidation,parked_at_end", float(len(cl.parked))),
+            ("e2e_consolidation,ping_pong_free", pp_free)] + cons_rows
+    ok = (jain >= 0.95 and rep.cores_saved > 0 and rep.max_parked >= 1
+          and pp_free == 1.0 and conserved)
+    return {"rows": rows, "ok": ok,
+            "claim": f"autopilot parked {rep.max_parked} engine(s) in the "
+                     f"idle window (avg {rep.cores_saved:.2f} cores saved"
+                     f"/step), Jain {jain:.3f} >= 0.95, "
+                     f"{rep.autopilot_moves} moves, 0 ping-pong, both "
+                     f"planes conserved"}
+
+
+def run_e2e_hotspot(engines: int = 3,
+                    intervals: int = E2E_INTERVALS) -> Dict:
+    """Claim (g): the closed placement loop auto-migrates a developing hog.
+
+    Everyone equal until a third of the way in, then one tenant turns
+    10x. ``spread_hot`` detects the heating engine and migrates the hog
+    (and nothing twice) on its own; isolation (< 5% vs the hog-free
+    baseline on the same autopilot cluster shape) and Jain >= 0.95 hold
+    across the automatic migration; both planes' ledgers are conserved.
+    """
+    from repro.serve.replay import (
+        TraceReplayer, adversarial_baseline, scenario_spec,
+    )
+    n = E2E_TENANTS
+    trace, cap = scenario_spec("hotspot", n_tenants=n, intervals=intervals)
+    base_trace = adversarial_baseline(trace)
+
+    def run(tr):
+        cl = _autopilot_cluster(cap, engines, "spread_hot")
+        pump, pumped = _byte_pump(cl)
+        events = [(i, pump) for i in range(tr.loads.shape[1])]
+        return TraceReplayer(cl, capacity=cap).run(tr, events=events), \
+            cl, pumped
+
+    base, _, _ = run(base_trace)
+    shared, cl, pumped = run(trace)
+    hog = n - 1
+    rows, worst = [], 0.0
+    for t in range(n - 1):
+        degr = max(1.0 - shared.per_tenant[t].achieved_rate
+                   / base.per_tenant[t].achieved_rate, 0.0)
+        worst = max(worst, degr)
+        rows.append((f"e2e_hotspot,tenant{t}_degradation", degr))
+    jain = shared.jain()
+    moved = [mv.tenant for _, mv in cl.autopilot.move_log]
+    hog_moved = 1.0 if moved.count(hog) >= 1 else 0.0
+    pp_free = _ping_pong_free(cl)
+    cons_rows, conserved = _conservation_rows("e2e_hotspot", cl, pumped, n)
+    rows += [("e2e_hotspot,jain_index", jain),
+             ("e2e_hotspot,max_degradation", worst),
+             ("e2e_hotspot,hog_auto_migrated", hog_moved),
+             ("e2e_hotspot,autopilot_moves",
+              float(shared.autopilot_moves)),
+             ("e2e_hotspot,live_migrations", float(shared.migrations)),
+             ("e2e_hotspot,ping_pong_free", pp_free)] + cons_rows
+    ok = (hog_moved == 1.0 and worst < 0.05 and jain >= 0.95
+          and pp_free == 1.0 and conserved)
+    return {"rows": rows, "ok": ok,
+            "claim": f"autopilot migrated the hog on its own "
+                     f"({shared.autopilot_moves} move(s), 0 ping-pong), "
+                     f"Jain {jain:.3f} >= 0.95, worst in-budget "
+                     f"degradation {worst:.2%} < 5%, both planes "
+                     f"conserved"}
+
+
+AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot)
+SMOKE_INTERVALS = 12
+
+
+def _parse_args(argv):
+    opts = {"e2e": "--e2e" in argv, "smoke": "--smoke" in argv,
+            "autopilot": "--autopilot" in argv, "engines": 1,
+            "json": None}
+    for flag in ("--engines", "--json"):
+        if flag in argv:
+            i = argv.index(flag)
+            if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+                raise SystemExit(f"{flag} needs a value")
+            opts[flag.lstrip("-")] = argv[i + 1]
+    if opts["engines"] != 1:
+        try:
+            opts["engines"] = int(opts["engines"])
         except ValueError:
             raise SystemExit(f"--engines needs an integer, "
-                             f"got {argv[i + 1]!r}")
-        if n_eng > 1:
-            def bench_multi(n=n_eng):
+                             f"got {opts['engines']!r}")
+    if (opts["engines"] > 1 or opts["autopilot"] or opts["smoke"]) \
+            and not opts["e2e"]:
+        raise SystemExit("--engines/--autopilot/--smoke only apply to the "
+                         "e2e suite: add --e2e")
+    if opts["autopilot"] and opts["engines"] < 2:
+        raise SystemExit("--autopilot needs a cluster: use --engines N "
+                         "(N >= 2)")
+    if opts["smoke"] and not opts["autopilot"]:
+        raise SystemExit("--smoke runs only the autopilot claims: "
+                         "add --autopilot")
+    return opts
+
+
+def main(argv=None) -> None:
+    opts = _parse_args(sys.argv[1:] if argv is None else argv)
+    intervals = SMOKE_INTERVALS if opts["smoke"] else E2E_INTERVALS
+    benches = []
+    if not opts["smoke"]:
+        benches = list(E2E if opts["e2e"] else ALL)
+        if opts["engines"] > 1:
+            def bench_multi(n=opts["engines"]):
                 return run_e2e_multi_engine(n)
-            bench_multi.__name__ = f"run_e2e_multi_engine_x{n_eng}"
+            bench_multi.__name__ = f"run_e2e_multi_engine_x{opts['engines']}"
             benches.append(bench_multi)
+    if opts["autopilot"]:
+        for fn in AUTOPILOT:
+            def bench_ap(fn=fn, n=opts["engines"], iv=intervals):
+                return fn(n, intervals=iv)
+            bench_ap.__name__ = fn.__name__
+            benches.append(bench_ap)
     print("name,value")
-    failures = 0
+    failures, results = 0, []
     for bench in benches:
         out = bench()
         for name, value in out["rows"]:
@@ -300,6 +497,21 @@ def main(argv=None) -> None:
         status = "PASS" if out["ok"] else "FAIL"
         print(f"{bench.__name__},{status}: {out['claim']}", file=sys.stderr)
         failures += 0 if out["ok"] else 1
+        results.append({"bench": bench.__name__, "ok": out["ok"],
+                        "claim": out["claim"],
+                        "metrics": {n: v for n, v in out["rows"]}})
+    if opts["json"]:
+        doc = {"ok": failures == 0,
+               "suite": ("smoke" if opts["smoke"] else
+                         "e2e" if opts["e2e"] else "fluid"),
+               "engines": opts["engines"],
+               "intervals": intervals if opts["e2e"] else None,
+               "results": results,
+               "metrics": {n: v for r in results
+                           for n, v in r["metrics"].items()}}
+        pathlib.Path(opts["json"]).write_text(json.dumps(doc, indent=2)
+                                              + "\n")
+        print(f"wrote {opts['json']}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

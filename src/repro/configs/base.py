@@ -283,6 +283,10 @@ class RunConfig:
     # NetKernel stack policy (the paper's contribution surface)
     nsm_policy: str = "xla"       # xla | ring | hierarchical | compressed | shm-first
     explicit_pod_sync: bool = False  # route cross-pod grad sync through CoreEngine
+    # track the int8 error-feedback residual of the gradients each step
+    # (metrics["ef_residual_max"]) — the measured signal an EF-aware
+    # numerics tolerance derives from (see test_nsm_conformance.py)
+    track_ef_residual: bool = False
 
     # numerics / memory
     remat: str = "full"           # full | dots | none

@@ -11,6 +11,10 @@ from repro.control.congestion import (
     Aimd, CongestionControl, Dctcp, WaterFill, max_min_fair,
 )
 from repro.control.controller import RateController
+from repro.control.placement import (
+    PLACEMENT_POLICIES, ClusterView, Consolidate, PlacementController,
+    PlacementPlan, PlacementPolicy, PlannedMove, SpreadHot, make_policy,
+)
 from repro.control.sim import SharedBottleneckSim, SimResult, SimTenant
 from repro.control.telemetry import (
     EngineTelemetry, SchedulerTelemetry, TenantObs, merge_obs,
@@ -19,6 +23,9 @@ from repro.control.telemetry import (
 __all__ = [
     "Aimd", "CongestionControl", "Dctcp", "WaterFill", "max_min_fair",
     "RateController",
+    "PLACEMENT_POLICIES", "ClusterView", "Consolidate",
+    "PlacementController", "PlacementPlan", "PlacementPolicy",
+    "PlannedMove", "SpreadHot", "make_policy",
     "SharedBottleneckSim", "SimResult", "SimTenant",
     "EngineTelemetry", "SchedulerTelemetry", "TenantObs", "merge_obs",
 ]

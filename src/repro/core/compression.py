@@ -7,7 +7,7 @@ feedback (residual carrying) restores convergence; see test_train_loop.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,28 @@ def compressed_psum(x: jax.Array, axes, *, axis_sizes: int) -> jax.Array:
     q = quantize_int8(x.astype(jnp.float32), scale)
     s = jax.lax.psum(q.astype(jnp.int32), axes)
     return dequantize_int8(s, scale, orig_dtype)
+
+
+def int8_roundtrip_residual(x: jax.Array,
+                            scale: Optional[jax.Array] = None) -> jax.Array:
+    """``x_hat - x`` for one int8 wire round trip of ``x`` — exactly the
+    residual error feedback would carry into the next step.
+
+    ``scale`` defaults to the symmetric absmax/127 scale
+    ``compressed_psum`` agrees on; pass the *global* (pmax'd) scale to
+    measure the per-shard error of a distributed sum. This is the
+    measured quantity an error-feedback-aware tolerance derives from: an
+    int8 psum over ``k`` shards is off by at most the sum of the shards'
+    round-trip residuals, so ``k * max|residual|`` bounds the absolute
+    error without any hand-tuned constant (see
+    tests/test_nsm_conformance.py and ``train_loop``'s
+    ``track_ef_residual``).
+    """
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    q = quantize_int8(xf, scale)
+    return dequantize_int8(q, scale) - xf
 
 
 def ef_compress_decompress(x: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array]:

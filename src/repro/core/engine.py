@@ -271,6 +271,61 @@ class CoreEngine:
             raise ValueError(f"NSM {nsm.name} cannot execute {verb}")
         return fn(x, tuple(axes), axis_sizes=self.axis_sizes(), op=op, **kw)
 
+    # --- migration (bytes-plane half of live tenant migration) -----------
+    def export_tenant(self, tenant_id: int,
+                      now: Optional[float] = None) -> Dict:
+        """Atomically remove a tenant's bytes-plane state and return it.
+
+        Mirrors ``TenantScheduler.export_tenant`` for the collective
+        fabric: the tenant's token-bucket *level* travels (a move can
+        never reopen a fresh burst of bytes), and the cumulative ledger /
+        deferred / admitted counters are handed to the caller to *carry*
+        — ``import_tenant`` deliberately does not replay them into the
+        destination engine, where the jump would read as a rate spike to
+        ``EngineTelemetry`` (the same counter-reset discipline the
+        scheduler plane uses). Conservation: carried + both engines' live
+        counters must be unchanged across the move; ``EngineCluster``
+        asserts exactly that on every plan.
+        """
+        with self._lock:
+            ledger = {}
+            for key in [k for k in self.ledger if k[0] == tenant_id]:
+                e = self.ledger.pop(key)
+                ledger[(key[1], key[2])] = (e.ops, e.bytes)
+            deferred = {}
+            for key in [k for k in self.deferred if k[0] == tenant_id]:
+                e = self.deferred.pop(key)
+                deferred[key[1]] = (e.ops, e.bytes)
+            adm = self.admitted.pop(tenant_id, None)
+            state = {
+                "bucket": (self.buckets[tenant_id].snapshot(now)
+                           if tenant_id in self.buckets else None),
+                "ledger": ledger,                   # (verb, axes) -> (ops, b)
+                "deferred": deferred,               # axes -> (ops, bytes)
+                "admitted": (adm.ops, adm.bytes) if adm else (0, 0),
+                "admit_wait_s": self.admit_wait_s.pop(tenant_id, 0.0),
+            }
+            self.buckets.pop(tenant_id, None)
+        return state
+
+    def import_tenant(self, tenant_id: int, state: Dict,
+                      now: Optional[float] = None) -> None:
+        """Install a migrated tenant's bytes-plane state.
+
+        Only the enforcement state (the bucket, at its transferred level,
+        anchored at ``now``) lands here; the exported counters stay with
+        the operator's carried ledger — see ``export_tenant``.
+        """
+        with self._lock:
+            if tenant_id in self.buckets:
+                raise ValueError(
+                    f"tenant {tenant_id} already has a bucket on this "
+                    f"engine; bytes-plane migration requires a quiesced "
+                    f"destination")
+            if state.get("bucket") is not None:
+                self.buckets[tenant_id] = TokenBucket.restore(
+                    state["bucket"], now)
+
     # --- reporting ---------------------------------------------------------
     def ledger_table(self) -> List[Tuple[int, str, Tuple[str, ...], int, int]]:
         with self._lock:

@@ -2,12 +2,12 @@ from repro.serve.cluster import ClusterLedger, EngineCluster, MigrationRecord
 from repro.serve.engine import ServeEngine, Slot
 from repro.serve.multiplex import (
     TRACES, Trace, adversarial_trace, bursty_trace, chip_accounting,
-    correlated_burst_trace, fair_replay, jain_index, paper_table2_analog,
-    ramp_trace, steady_trace,
+    correlated_burst_trace, fair_replay, hotspot_trace, idle_window_trace,
+    jain_index, paper_table2_analog, ramp_trace, steady_trace,
 )
 from repro.serve.replay import (
-    ReplayReport, TenantReport, TraceReplayer, make_replay_cluster,
-    make_replay_engine, replay_scenario, scenario_spec,
+    CLUSTER_SCENARIOS, SCENARIOS, ReplayReport, TenantReport, TraceReplayer,
+    make_replay_cluster, make_replay_engine, replay_scenario, scenario_spec,
 )
 from repro.serve.scheduler import Request, TenantScheduler
 
@@ -15,8 +15,9 @@ __all__ = [
     "ClusterLedger", "EngineCluster", "MigrationRecord",
     "ServeEngine", "Slot", "TRACES", "Trace", "adversarial_trace",
     "bursty_trace", "chip_accounting", "correlated_burst_trace",
-    "fair_replay", "jain_index", "paper_table2_analog", "ramp_trace",
-    "steady_trace", "ReplayReport", "TenantReport", "TraceReplayer",
-    "make_replay_cluster", "make_replay_engine", "replay_scenario",
-    "scenario_spec", "Request", "TenantScheduler",
+    "fair_replay", "hotspot_trace", "idle_window_trace", "jain_index",
+    "paper_table2_analog", "ramp_trace", "steady_trace",
+    "CLUSTER_SCENARIOS", "SCENARIOS", "ReplayReport", "TenantReport",
+    "TraceReplayer", "make_replay_cluster", "make_replay_engine",
+    "replay_scenario", "scenario_spec", "Request", "TenantScheduler",
 ]

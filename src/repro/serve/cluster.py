@@ -31,12 +31,30 @@ request-level ground truth — sum of prompt+generated tokens over the
 tenant's completed and in-flight requests — at every instant, including
 across the migration window. ``assert_ledger_conservation`` checks exactly
 that (no lost tokens, no double-billing) and is invoked on every move.
+
+Two closed-loop extensions sit on top of the migration primitive:
+
+  * **park/unpark lifecycle** — a quiesced engine can be parked (it stops
+    stepping: the cluster "saves cores", the paper's multiplexing claim)
+    and unparked when load returns. ``parked_engine_steps`` accumulates
+    the savings; at least one engine always stays awake.
+  * **autopilot** — an attached ``PlacementController``
+    (repro.control.placement) is ticked every ``place_every`` steps,
+    exactly how the shared RateController is ticked, and applies its
+    plans through ``apply_plan`` -> ``migrate``: the placement loop runs
+    closed, next to the rate loop.
+
+When ``core_engines`` pairs each ServeEngine with a bytes-plane
+``CoreEngine``, one migration moves the tenant's serve *and* collective
+traffic: the core bucket level transfers, the core ledger folds into a
+cluster-level carried view, and byte conservation is asserted the same
+way token conservation is.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 from repro.control.telemetry import format_prometheus
 from repro.serve.engine import ServeEngine
@@ -44,6 +62,9 @@ from repro.serve.scheduler import Request
 
 _LEDGER_FIELDS = ("served_tokens", "admitted_requests", "deferred_polls",
                   "admit_wait_sum")
+# bytes-plane carried-ledger fields (CoreEngine.export_tenant output)
+_CORE_FIELDS = ("ops", "bytes", "deferred_ops", "deferred_bytes",
+                "admitted_ops", "admitted_bytes", "admit_wait_s")
 
 
 @dataclass
@@ -144,10 +165,17 @@ class EngineCluster:
             the ONE bottleneck spanning all engines). Any engine scheduler
             not yet attached to it is attached here.
         control_every: controller tick period, in cluster steps.
+        core_engines: optional bytes-plane ``CoreEngine`` per ServeEngine
+            (same order/length): a migration then moves the tenant's
+            collective-traffic state (bucket level + carried ledger) in
+            the same plan, byte conservation asserted.
+        place_every: autopilot tick period, in cluster steps (takes
+            effect once ``attach_autopilot`` is called).
     """
 
     def __init__(self, engines: Sequence[ServeEngine], controller=None,
-                 *, control_every: int = 4):
+                 *, control_every: int = 4, core_engines=None,
+                 place_every: int = 8):
         self.engines: List[ServeEngine] = list(engines)
         if not self.engines:
             raise ValueError("EngineCluster needs at least one engine")
@@ -163,8 +191,19 @@ class EngineCluster:
                 if id(e.scheduler) not in attached:
                     controller.attach_scheduler(e.scheduler)
         self.control_every = max(int(control_every), 1)
+        self.core_engines = list(core_engines) if core_engines else None
+        if self.core_engines is not None and \
+                len(self.core_engines) != len(self.engines):
+            raise ValueError(
+                f"core_engines must pair 1:1 with engines "
+                f"({len(self.core_engines)} vs {len(self.engines)})")
+        self.autopilot = None
+        self.place_every = max(int(place_every), 1)
         self.placement: Dict[int, int] = {}
         self.draining: Dict[int, int] = {}          # tenant -> src engine
+        self.parked: Set[int] = set()               # engine indices asleep
+        self.parked_engine_steps = 0                # the cores-saved ledger
+        self.max_parked = 0                         # peak engines asleep
         self.migration_log: List[MigrationRecord] = []
         self.migrations_started = 0
         self.migrations_completed = 0
@@ -173,7 +212,20 @@ class EngineCluster:
         self.steps = 0
         self._carried: Dict[str, Dict[int, float]] = \
             {f: {} for f in _LEDGER_FIELDS}
+        self._carried_core: Dict[str, Dict[int, float]] = \
+            {f: {} for f in _CORE_FIELDS}
         self.scheduler = ClusterLedger(self)
+
+    def attach_autopilot(self, autopilot,
+                         place_every: Optional[int] = None):
+        """Close the placement loop: tick ``autopilot`` (typically a
+        ``repro.control.placement.PlacementController`` built over this
+        cluster) every ``place_every`` cluster steps, next to the rate
+        controller's own cadence. Returns the autopilot for chaining."""
+        self.autopilot = autopilot
+        if place_every is not None:
+            self.place_every = max(int(place_every), 1)
+        return autopilot
 
     # -- engine-like surface ------------------------------------------------
     @property
@@ -197,18 +249,31 @@ class EngineCluster:
 
     def step(self, now: Optional[float] = None) -> int:
         """One cluster step: tick the shared controller (every
-        ``control_every`` steps), step every engine once, collect
-        completions, finalize any drained migrations. Returns the number
-        of active slots cluster-wide."""
+        ``control_every`` steps), step every awake engine once, collect
+        completions, finalize any drained migrations, tick the autopilot
+        (every ``place_every`` steps). Parked engines do not step — that
+        skipped work *is* the cores-saved claim, accumulated in
+        ``parked_engine_steps``. Returns the number of active slots
+        cluster-wide."""
         self.steps += 1
         if self.controller is not None and \
                 self.steps % self.control_every == 0:
             self.controller.tick(time.monotonic() if now is None else now)
         active = 0
-        for e in self.engines:
+        for k, e in enumerate(self.engines):
+            if k in self.parked:
+                continue
             active += e.step(now=now)
+        # account the parked set that actually held during the engine loop
+        # — an engine the autopilot parks below still ran this step and
+        # must not be billed as a saved core until the next one
+        self.parked_engine_steps += len(self.parked)
+        self.max_parked = max(self.max_parked, len(self.parked))
         self._collect_completed()
         self._poll_drains()
+        if self.autopilot is not None and \
+                self.steps % self.place_every == 0:
+            self.autopilot.tick(time.monotonic() if now is None else now)
         return active
 
     # -- placement ----------------------------------------------------------
@@ -231,6 +296,9 @@ class EngineCluster:
         idx = engine if engine is not None else self._auto_place()
         if not 0 <= idx < len(self.engines):
             raise IndexError(f"engine {idx} not in cluster")
+        if idx in self.parked:
+            raise ValueError(f"engine {idx} is parked; unpark it before "
+                             f"placing tenant {tenant_id} there")
         self.placement[tenant_id] = idx
         self.engines[idx].scheduler.add_tenant(tenant_id, weight=weight)
         return idx
@@ -238,11 +306,15 @@ class EngineCluster:
     def set_weight(self, tenant_id: int, weight: float) -> None:
         self.add_tenant(tenant_id, weight=weight)
 
+    def active_engines(self) -> List[int]:
+        """Engine indices currently awake (not parked)."""
+        return [k for k in range(len(self.engines)) if k not in self.parked]
+
     def _auto_place(self) -> int:
         def load(k: int):
             placed = sum(1 for v in self.placement.values() if v == k)
             return (self.engine_load(k), placed, k)
-        return min(range(len(self.engines)), key=load)
+        return min(self.active_engines(), key=load)
 
     def engine_load(self, k: int) -> float:
         """Demand pressure on engine ``k``: queued + in-flight requests."""
@@ -250,12 +322,58 @@ class EngineCluster:
         return float(e.scheduler.pending() + e.inflight())
 
     def hottest_engine(self) -> int:
-        return max(range(len(self.engines)),
+        return max(self.active_engines(),
                    key=lambda k: (self.engine_load(k), -k))
 
     def coolest_engine(self) -> int:
-        return min(range(len(self.engines)),
+        return min(self.active_engines(),
                    key=lambda k: (self.engine_load(k), k))
+
+    # -- park/unpark lifecycle (the cores-saved claim) ----------------------
+    def parkable(self, k: int) -> bool:
+        """True iff engine ``k`` could be parked right now: awake, fully
+        quiesced (no placed tenants, no draining source, no queued or
+        in-flight work) and not the last awake engine."""
+        if not 0 <= k < len(self.engines) or k in self.parked:
+            return False
+        if len(self.active_engines()) <= 1:
+            return False
+        if any(v == k for v in self.placement.values()):
+            return False
+        if any(src == k for src in self.draining.values()):
+            return False
+        e = self.engines[k]
+        return e.scheduler.pending() == 0 and e.inflight() == 0
+
+    def park(self, k: int) -> None:
+        """Put a quiesced engine to sleep: it stops stepping (saved cores)
+        until ``unpark``. Raises if the engine still has any work — parking
+        must never strand a tenant."""
+        if not 0 <= k < len(self.engines):
+            raise IndexError(f"engine {k} not in cluster")
+        if k in self.parked:
+            raise ValueError(f"engine {k} is already parked")
+        if not self.parkable(k):
+            raise ValueError(
+                f"engine {k} is not quiesced (tenants placed, work "
+                f"in-flight, a drain in progress, or it is the last "
+                f"awake engine); refuse to park")
+        self.parked.add(k)
+
+    def unpark(self, k: int) -> None:
+        """Wake a parked engine; it resumes stepping and can host tenants
+        again immediately."""
+        if not 0 <= k < len(self.engines):
+            raise IndexError(f"engine {k} not in cluster")
+        if k not in self.parked:
+            raise ValueError(f"engine {k} is not parked")
+        self.parked.discard(k)
+
+    def cores_saved(self) -> float:
+        """Average engines parked per cluster step so far — the closed-loop
+        analog of the paper's Table-2 core savings (engine units; 1.0 =
+        one whole engine slept through the run)."""
+        return self.parked_engine_steps / max(self.steps, 1)
 
     # -- migration ----------------------------------------------------------
     def migrate(self, tenant: int, dst_engine: int,
@@ -283,6 +401,9 @@ class EngineCluster:
             raise IndexError(f"engine {dst} not in cluster")
         if dst == src:
             return None
+        if dst in self.parked:
+            raise ValueError(f"engine {dst} is parked; unpark it before "
+                             f"migrating tenant {tenant} onto it")
         src_eng, dst_eng = self.engines[src], self.engines[dst]
         # validate the destination BEFORE the destructive export: failing
         # after export_tenant would lose the unserved queue it returned
@@ -291,11 +412,33 @@ class EngineCluster:
                 f"tenant {tenant} is already active on engine {dst} "
                 f"(out-of-band submission?); migration requires a "
                 f"quiesced destination")
+        if self.core_engines is not None and \
+                tenant in self.core_engines[dst].buckets:
+            # same discipline for the bytes plane: its import would refuse
+            # a non-quiesced destination, but only AFTER the serve state
+            # and the core ledger had been destructively exported
+            raise ValueError(
+                f"tenant {tenant} already has a bytes-plane bucket on "
+                f"engine {dst} (out-of-band set_tenant_rate?); migration "
+                f"requires a quiesced destination on both planes")
         total_before = self.tenant_served_tokens(tenant)
         inflight = src_eng.inflight(tenant)
         state = src_eng.scheduler.export_tenant(tenant, now)
         self._fold(tenant, state)
         dst_eng.scheduler.import_tenant(tenant, state, now)
+        if self.core_engines is not None:
+            # one plan moves both planes: the tenant's collective-traffic
+            # state follows its serve state, byte-conserving
+            core_before = self.tenant_core_bytes(tenant)
+            cstate = self.core_engines[src].export_tenant(tenant, now)
+            self._fold_core(tenant, cstate)
+            self.core_engines[dst].import_tenant(tenant, cstate, now)
+            core_after = self.tenant_core_bytes(tenant)
+            if int(round(core_after)) != int(round(core_before)):
+                raise AssertionError(
+                    f"bytes-plane migration broke tenant {tenant}'s "
+                    f"ledger continuity: {core_before} -> {core_after} "
+                    f"bytes")
         self.placement[tenant] = dst
         if self.controller is not None:
             self.controller.invalidate_tenant(tenant)
@@ -323,23 +466,84 @@ class EngineCluster:
         """Operator one-shot: move a tenant off the hottest engine onto the
         coolest. Default victim is the hottest engine's most-backlogged
         tenant (by queue depth — under an adversarial trace, the hog).
-        No-op (returns None) if the cluster is already balanced."""
-        hot, cool = self.hottest_engine(), self.coolest_engine()
-        if hot == cool:
+        No-op (returns None) if the cluster is already balanced.
+
+        .. deprecated:: since the placement autopilot landed this is a
+           thin wrapper over ``PlacementController.plan_once`` (the
+           ``spread_hot`` policy, forced: no bands, no cooldown, no drain
+           gate — the legacy semantics). Prefer attaching a
+           ``PlacementController`` via ``attach_autopilot`` so the loop
+           runs closed instead of one operator shot at a time.
+        """
+        from repro.control.placement import PlacementController
+        if tenant is not None:
+            # keep the legacy error contract migrate() provided
+            if tenant not in self.placement:
+                raise KeyError(
+                    f"tenant {tenant} is not placed on this cluster")
+            if tenant in self.draining:
+                raise RuntimeError(
+                    f"tenant {tenant} is still draining from a previous "
+                    f"migration; wait for it to finalize")
+        pc = PlacementController(self, policy="spread_hot",
+                                 cooldown_s=0.0, drain_cost_factor=None)
+        before = len(self.migration_log)
+        pc.plan_once(now=now, pin_tenant=tenant, force=True)
+        if len(self.migration_log) == before:
             return None
-        if tenant is None:
-            on_hot = [t for t, k in self.placement.items()
-                      if k == hot and t not in self.draining]
-            if not on_hot:
-                return None
-            sched = self.engines[hot].scheduler
-            tenant = max(on_hot, key=lambda t: (sched.pending(t), -t))
-        return self.migrate(tenant, cool, now=now)
+        return self.migration_log[before]
+
+    def apply_plan(self, plan, *,
+                   now: Optional[float] = None) -> List[MigrationRecord]:
+        """Apply a ``PlacementPlan``: unpark first (a move may target a
+        waking engine), then every move through ``migrate``'s
+        ledger-conserving drain-and-transfer, then park engines the plan
+        emptied. Stale entries — a tenant that already moved or is
+        mid-drain, a park target that turns out non-quiesced — are skipped
+        rather than raised: plans are computed from a snapshot and the
+        cluster may have moved on. Returns the records of the migrations
+        that actually happened (conservation was asserted on each)."""
+        records: List[MigrationRecord] = []
+        for k in plan.unpark:
+            if k in self.parked:
+                self.unpark(k)
+        for mv in plan.moves:
+            if mv.tenant not in self.placement or \
+                    mv.tenant in self.draining:
+                continue
+            if self.placement[mv.tenant] != mv.src:
+                continue                           # stale: already moved
+            if mv.dst in self.parked:
+                continue                           # unpark was skipped
+            rec = self.migrate(mv.tenant, mv.dst, now=now)
+            if rec is not None:
+                records.append(rec)
+        for k in plan.park:
+            if k not in self.parked and self.parkable(k):
+                self.park(k)
+        return records
 
     def _fold(self, tenant: int, state: Dict) -> None:
         for f in _LEDGER_FIELDS:
             c = self._carried[f]
             c[tenant] = c.get(tenant, 0) + state.get(f, 0)
+
+    def _fold_core(self, tenant: int, state: Dict) -> None:
+        """Fold one CoreEngine export into the bytes-plane carried ledger
+        (flattening the per-(verb, axes) detail to per-tenant totals —
+        the continuity invariant is about totals)."""
+        ops = sum(o for o, _ in state.get("ledger", {}).values())
+        nbytes = sum(b for _, b in state.get("ledger", {}).values())
+        d_ops = sum(o for o, _ in state.get("deferred", {}).values())
+        d_bytes = sum(b for _, b in state.get("deferred", {}).values())
+        a_ops, a_bytes = state.get("admitted", (0, 0))
+        inc = {"ops": ops, "bytes": nbytes,
+               "deferred_ops": d_ops, "deferred_bytes": d_bytes,
+               "admitted_ops": a_ops, "admitted_bytes": a_bytes,
+               "admit_wait_s": state.get("admit_wait_s", 0.0)}
+        for f in _CORE_FIELDS:
+            c = self._carried_core[f]
+            c[tenant] = c.get(tenant, 0) + inc[f]
 
     def _finalize(self, rec: MigrationRecord) -> None:
         rec.finalized_step = self.steps
@@ -388,6 +592,15 @@ class EngineCluster:
         return self._carried["served_tokens"].get(tenant, 0) + sum(
             e.scheduler.served_tokens.get(tenant, 0) for e in self.engines)
 
+    def tenant_core_bytes(self, tenant: int) -> float:
+        """Collective bytes routed for a tenant cluster-wide, continuous
+        across migrations (bytes-plane carried + live CoreEngine ledgers).
+        0.0 when the cluster has no bytes plane attached."""
+        if self.core_engines is None:
+            return 0.0
+        return self._carried_core["bytes"].get(tenant, 0) + sum(
+            ce.total_bytes(tenant) for ce in self.core_engines)
+
     def tenant_billed_ground_truth(self, tenant: int) -> int:
         """Request-level ground truth: prompt+generated tokens over the
         tenant's completed and in-flight requests. The billing scheme
@@ -423,13 +636,22 @@ class EngineCluster:
             "nk_migrations_completed_total":
                 float(self.migrations_completed),
             "nk_migrations_draining": float(len(self.draining)),
+            "nk_cluster_parked": float(len(self.parked)),
+            "nk_parked_engine_steps_total":
+                float(self.parked_engine_steps),
+            "nk_cores_saved": self.cores_saved(),
         }
         for t, k in sorted(self.placement.items()):
             out[f'nk_placement{{tenant="{t}"}}'] = float(k)
         for k, e in enumerate(self.engines):
             out[f'nk_engine_load{{engine="{k}"}}'] = self.engine_load(k)
+            out[f'nk_engine_parked{{engine="{k}"}}'] = \
+                float(k in self.parked)
             out[f'nk_engine_decode_steps_total{{engine="{k}"}}'] = \
                 float(e.decode_steps)
+        if self.autopilot is not None and \
+                hasattr(self.autopilot, "counters"):
+            out.update(self.autopilot.counters())
         if self.controller is not None:
             out.update(self.controller.counters())
         return out

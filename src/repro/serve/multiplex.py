@@ -97,12 +97,45 @@ def ramp_trace(n_tenants: int, intervals: int = 60,
     return Trace(loads=loads)
 
 
+def idle_window_trace(n_tenants: int, intervals: int = 60,
+                      base: float = 3.0, idle_level: float = 0.2,
+                      idle_start: Optional[int] = None,
+                      idle_end: Optional[int] = None) -> Trace:
+    """Every tenant busy at ``base``, then a shared idle window at
+    ``idle_level`` (a trickle, not silence — tenants stay placeable),
+    then busy again. The consolidation story: during the window the whole
+    fleet fits one engine, so a closed placement loop should pack tenants
+    together and park the rest of the cluster (cores saved), waking it
+    when load returns."""
+    idle_start = intervals // 3 if idle_start is None else idle_start
+    idle_end = 2 * intervals // 3 if idle_end is None else idle_end
+    loads = np.full((n_tenants, intervals), float(base))
+    loads[:, idle_start:idle_end] = float(idle_level)
+    return Trace(loads=loads)
+
+
+def hotspot_trace(n_tenants: int, intervals: int = 60,
+                  base: float = 1.0, hog_factor: float = 10.0,
+                  hog: int = -1, onset: Optional[int] = None) -> Trace:
+    """Everyone equal until ``onset``, then one tenant turns into a
+    ``hog_factor``x-the-fleet misbehaver — the hotspot *develops* mid-run
+    (unlike ``adversarial_trace``, which is hot from interval 0), so a
+    placement loop has to detect the heating engine and migrate the hog
+    away on its own."""
+    onset = intervals // 3 if onset is None else onset
+    loads = np.full((n_tenants, intervals), float(base))
+    loads[hog, onset:] = hog_factor * base * n_tenants
+    return Trace(loads=loads)
+
+
 TRACES = {
     "bursty": bursty_trace,
     "steady": steady_trace,
     "adversarial": adversarial_trace,
     "correlated": correlated_burst_trace,
     "ramp": ramp_trace,
+    "idle_window": idle_window_trace,
+    "hotspot": hotspot_trace,
 }
 
 

@@ -62,7 +62,13 @@ class ReplayReport:
     ``engines``/``migrations``/``placement`` surface the cluster view when
     the replay drove an ``EngineCluster``: how many engines shared the
     bottleneck, how many live migrations finalized inside this window, and
-    where each tenant ended up (tenant -> engine index)."""
+    where each tenant ended up (tenant -> engine index).
+
+    ``cores_saved``/``max_parked``/``autopilot_moves`` surface the
+    placement loop when an autopilot drove the cluster: average engines
+    parked per step inside this window (the closed-loop core savings),
+    the peak engines asleep at once, and how many moves the autopilot
+    applied."""
 
     duration_s: float
     capacity: float               # enforced bottleneck, tokens/s
@@ -73,6 +79,9 @@ class ReplayReport:
     engines: int = 1
     migrations: int = 0
     placement: Optional[Dict[int, int]] = None
+    cores_saved: float = 0.0      # avg engines parked per cluster step
+    max_parked: int = 0           # peak engines asleep at once
+    autopilot_moves: int = 0      # placement-loop migrations this window
 
     def rates(self) -> Dict[int, float]:
         return {t: r.achieved_rate for t, r in self.per_tenant.items()}
@@ -200,6 +209,10 @@ class TraceReplayer:
         skip0 = getattr(ctrl, "push_skipped", 0)
         steps0 = self.engine.decode_steps
         migrations0 = getattr(self.engine, "migrations_completed", 0)
+        cl_steps0 = getattr(self.engine, "steps", 0)
+        parked0 = getattr(self.engine, "parked_engine_steps", 0)
+        pilot = getattr(self.engine, "autopilot", None)
+        pilot_moves0 = getattr(pilot, "moves_applied", 0)
 
         ev: Dict[int, list] = {}
         for idx, fn in (events or ()):
@@ -210,6 +223,9 @@ class TraceReplayer:
                                  f"{T}-interval trace")
             ev.setdefault(int(idx), []).append(fn)
         frac = np.zeros(n)
+        # per-window peak of engines asleep (the cluster's own max_parked
+        # is a lifetime high-water mark; this report is windowed)
+        max_parked = 0
         for t in range(T):
             for fn in ev.get(t, ()):
                 fn(self.engine, self._vt)
@@ -223,6 +239,8 @@ class TraceReplayer:
             while self._vt < interval_end - 1e-9:
                 self.engine.step(now=self._vt)
                 self._vt += self.step_dt
+                max_parked = max(max_parked,
+                                 len(getattr(self.engine, "parked", ())))
 
         duration = self._vt - start_vt
         completed: Dict[int, int] = {}
@@ -246,6 +264,9 @@ class TraceReplayer:
                 weight=self.weights.get(i, 1.0),
             )
         placement = getattr(self.engine, "placement", None)
+        cl_steps = getattr(self.engine, "steps", 0) - cl_steps0
+        parked_steps = getattr(self.engine, "parked_engine_steps", 0) \
+            - parked0
         return ReplayReport(
             duration_s=duration, capacity=self.capacity,
             per_tenant=per_tenant,
@@ -256,6 +277,10 @@ class TraceReplayer:
             migrations=getattr(self.engine, "migrations_completed", 0)
             - migrations0,
             placement=dict(placement) if placement is not None else None,
+            cores_saved=parked_steps / cl_steps if cl_steps else 0.0,
+            max_parked=max_parked,
+            autopilot_moves=getattr(pilot, "moves_applied", 0)
+            - pilot_moves0,
         )
 
 
@@ -293,7 +318,9 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
                         batch_slots: int = 4, max_seq: int = 32,
                         control_every: int = 4, push_mode: str = "full",
                         delta_tol: float = 0.05, model: str = "llama3.2-3b",
-                        weights=None, mesh=None):
+                        weights=None, mesh=None, autopilot=None,
+                        place_every: int = 8, autopilot_kw=None,
+                        core_plane: bool = False):
     """N smoke-scale ServeEngines behind ONE shared RateController — the
     multi-engine fabric the e2e scenarios drive.
 
@@ -301,6 +328,15 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
     cluster (the controller splits each tenant's allocation across engines
     by observed demand). Engine replicas share model weights and the
     compiled prefill/decode, so a cluster costs one compilation.
+
+    ``autopilot`` closes the placement loop: a policy name
+    ('consolidate'/'spread_hot') builds a ``PlacementController`` over the
+    cluster (extra policy/controller kwargs ride in ``autopilot_kw``;
+    'consolidate' defaults its ceiling to ``0.375 * capacity`` tokens/s —
+    between one and two equal shares of a 4-tenant fleet, so a busy fleet
+    spreads and an idle one packs), or pass a ready controller instance.
+    ``core_plane`` pairs each ServeEngine with a bytes-plane ``CoreEngine``
+    so migrations move collective-traffic state in the same plan.
     """
     from repro.configs import RunConfig, get_smoke_config
     from repro.control.controller import RateController
@@ -327,7 +363,33 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
             # shares one compiled stack and compiles once)
             eng._prefill, eng._decode = engs[0]._prefill, engs[0]._decode
         engs.append(eng)
-    return EngineCluster(engs, ctrl, control_every=control_every)
+    cores = None
+    if core_plane:
+        from repro.core.engine import CoreEngine
+        cores = [CoreEngine(enforcement="account") for _ in engs]
+    cluster = EngineCluster(engs, ctrl, control_every=control_every,
+                            core_engines=cores, place_every=place_every)
+    if autopilot is not None:
+        from repro.control.placement import PlacementController
+        if isinstance(autopilot, str):
+            kw = dict(autopilot_kw or {})
+            if autopilot == "consolidate":
+                kw.setdefault("ceiling", 0.375 * float(capacity))
+            autopilot = PlacementController(cluster, policy=autopilot, **kw)
+        cluster.attach_autopilot(autopilot, place_every=place_every)
+    return cluster
+
+
+# every name scenario_spec accepts (trace vocabulary + the cluster-only
+# scenarios layered on top of it)
+SCENARIOS = ("steady", "adversarial", "migration", "correlated", "ramp",
+             "bursty", "consolidation", "hotspot")
+
+# scenarios that need an EngineCluster (engines >= 2) to mean anything,
+# with the autopilot policy each one runs by default (None = operator-
+# driven: the migration scenario fires rebalance() from an event instead)
+CLUSTER_SCENARIOS = {"migration": None, "consolidation": "consolidate",
+                     "hotspot": "spread_hot"}
 
 
 def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
@@ -367,9 +429,21 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
         trace = mx.bursty_trace(n_tenants, intervals, seed=seed, base=2.0,
                                 burst=8.0)
         cap = capacity or float(trace.loads.sum(axis=0).mean()) * per_req * 0.7
+    elif name == "consolidation":
+        # busy -> shared idle window -> busy: the closed placement loop
+        # should pack the idle fleet onto one engine and park the rest
+        trace = mx.idle_window_trace(n_tenants, intervals, base=3.0,
+                                     idle_level=0.2)
+        demand = 3.0 * per_req * n_tenants
+        cap = capacity or demand * 0.7            # mild, stable contention
+    elif name == "hotspot":
+        # everyone equal, then one tenant turns 10x mid-run: the autopilot
+        # must detect the heating engine and migrate the hog on its own
+        trace = mx.hotspot_trace(n_tenants, intervals, base=1.0,
+                                 hog_factor=10.0)
+        cap = capacity or 1.0 * per_req * (n_tenants + 3)
     else:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"have {sorted(mx.TRACES) + ['migration']}")
+        raise KeyError(f"unknown scenario {name!r}; have {SCENARIOS}")
     return trace, cap
 
 
@@ -387,20 +461,29 @@ def adversarial_baseline(trace: Trace) -> Trace:
 def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                     capacity: Optional[float] = None, engine=None,
                     push_mode: str = "full", weights=None,
-                    seed: int = 0, engines: int = 1) -> ReplayReport:
+                    seed: int = 0, engines: int = 1, autopilot=None,
+                    core_plane: bool = False) -> ReplayReport:
     """Run one named scenario end-to-end and return the measured report.
 
     ``engines`` > 1 drives an ``EngineCluster`` (N ServeEngines behind one
     shared controller) instead of a single engine. The ``migration``
     scenario requires a cluster: mid-window the operator rebalances the
     hottest engine, so the report includes at least one live migration.
+
+    ``autopilot`` closes the placement loop on the cluster (policy name or
+    a ``PlacementController``); the ``consolidation`` and ``hotspot``
+    scenarios run their natural policy by default — no operator events,
+    the loop finds the moves itself. ``core_plane`` attaches a bytes-plane
+    CoreEngine per ServeEngine so every move carries both planes.
     """
     # fail fast, before any engine construction (jit compiles are minutes)
-    needs_cluster = name == "migration"
+    needs_cluster = name in CLUSTER_SCENARIOS
     if needs_cluster and (engines < 2 if engine is None
                           else not hasattr(engine, "rebalance")):
-        raise ValueError("the migration scenario needs a cluster: "
-                         "pass engines >= 2 (or an EngineCluster)")
+        raise ValueError(f"the {name} scenario needs a cluster: "
+                         f"pass engines >= 2 (or an EngineCluster)")
+    if autopilot is None:
+        autopilot = CLUSTER_SCENARIOS.get(name)
     trace, cap = scenario_spec(name, n_tenants=n_tenants,
                                intervals=intervals, capacity=capacity,
                                seed=seed)
@@ -408,12 +491,22 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     if eng is None:
         if engines > 1:
             eng = make_replay_cluster(capacity=cap, engines=engines,
-                                      push_mode=push_mode, weights=weights)
+                                      push_mode=push_mode, weights=weights,
+                                      autopilot=autopilot,
+                                      core_plane=core_plane)
         else:
             eng = make_replay_engine(capacity=cap, push_mode=push_mode,
                                      weights=weights)
+    elif autopilot is not None and getattr(eng, "autopilot", None) is None \
+            and hasattr(eng, "attach_autopilot"):
+        from repro.control.placement import PlacementController
+        if isinstance(autopilot, str):
+            kw = {"ceiling": 0.375 * cap} if autopilot == "consolidate" \
+                else {}
+            autopilot = PlacementController(eng, policy=autopilot, **kw)
+        eng.attach_autopilot(autopilot)
     events = None
-    if needs_cluster:
+    if name == "migration":
         events = [(max(intervals // 2, 1),
                    lambda e, now: e.rebalance(now=now))]
     rep = TraceReplayer(eng, capacity=cap, weights=weights)

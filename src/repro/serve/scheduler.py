@@ -194,6 +194,13 @@ class TenantScheduler:
             return len(self.queues.get(tenant_id, ()))
         return sum(len(q) for q in self.queues.values())
 
+    def queued_cost(self, tenant_id: int) -> int:
+        """Token price of a tenant's unadmitted queue (the bucket unit:
+        prompt + decode under ``charge_prompt``, decode only otherwise).
+        The placement autopilot's expected-gain signal: tokens that would
+        start serving at a migration destination."""
+        return sum(self._cost(r) for r in self.queues.get(tenant_id, ()))
+
     # -- admission ----------------------------------------------------------
     def _admissible(self, t: int, now: Optional[float]) -> bool:
         if not self.queues[t]:

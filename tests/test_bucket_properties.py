@@ -1,0 +1,129 @@
+"""TokenBucket snapshot/restore properties (hypothesis, shimmed).
+
+The placement autopilot exercises ``snapshot``/``restore`` on every plan it
+applies (serve-plane scheduler buckets AND bytes-plane CoreEngine buckets
+travel with each migrated tenant), so the transfer semantics are pinned as
+properties rather than a handful of examples:
+
+  * a snapshot/restore round trip preserves rate, capacity and *level*
+    exactly, under arbitrary virtual-clock advance on either side;
+  * the restored bucket is behaviourally indistinguishable from the
+    original (same ``wait_time`` for any demand at any future instant);
+  * restoring "onto a live bucket" (the scheduler's import path replaces
+    the destination's bucket object) yields an independent bucket — no
+    aliasing back to the source;
+  * the level is clamped to capacity on restore, so a tampered or
+    re-burst snapshot can never smuggle extra burst through a migration.
+
+Runs under real hypothesis when installed, the deterministic fallback of
+``tests/_hyp.py`` otherwise.
+"""
+import math
+
+import pytest
+
+from repro.core.engine import TokenBucket
+
+from _hyp import given, settings, st
+
+_RATES = st.floats(min_value=0.1, max_value=1e4)
+_CAPS = st.floats(min_value=1.0, max_value=1e5)
+_TIMES = st.floats(min_value=0.0, max_value=100.0)
+_FRACS = st.floats(min_value=0.0, max_value=1.0)
+
+
+def _burned(rate, cap, frac, t0):
+    """A bucket that consumed ``frac`` of its capacity at time ``t0``."""
+    b = TokenBucket(rate, cap)
+    b.consume(frac * cap, now=t0)
+    return b
+
+
+@settings(max_examples=60)
+@given(rate=_RATES, cap=_CAPS, frac=_FRACS, t0=_TIMES, dt=_TIMES)
+def test_roundtrip_preserves_level_rate_capacity(rate, cap, frac, t0, dt):
+    b = _burned(rate, cap, frac, t0)
+    snap = b.snapshot(now=t0 + dt)           # settle on the virtual clock
+    c = TokenBucket.restore(snap, now=t0 + dt)
+    assert c.rate == b.rate
+    assert c.capacity == b.capacity
+    assert c.tokens == pytest.approx(b.tokens, rel=1e-9, abs=1e-9)
+    assert 0.0 <= c.tokens <= c.capacity + 1e-9
+
+
+@settings(max_examples=60)
+@given(rate=_RATES, cap=_CAPS, frac=_FRACS, t0=_TIMES, dt=_TIMES,
+       dt2=_TIMES, want=_FRACS)
+def test_restored_bucket_is_behaviourally_identical(rate, cap, frac, t0,
+                                                    dt, dt2, want):
+    """Same wait_time for any demand at any later virtual instant — a
+    migration is invisible to the tenant's admission future."""
+    b = _burned(rate, cap, frac, t0)
+    c = TokenBucket.restore(b.snapshot(now=t0 + dt), now=t0 + dt)
+    later = t0 + dt + dt2
+    n = want * cap * 2.0                     # may exceed capacity: inf case
+    wb, wc = b.wait_time(n, now=later), c.wait_time(n, now=later)
+    if math.isinf(wb) or math.isinf(wc):
+        assert wb == wc
+    else:
+        assert wc == pytest.approx(wb, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=60)
+@given(rate=_RATES, cap=_CAPS, frac=_FRACS, t0=_TIMES)
+def test_restore_onto_live_bucket_is_independent(rate, cap, frac, t0):
+    """The import path swaps the destination's bucket object for the
+    restored one; draining the restored bucket must never touch the
+    source (no shared state across engines after a migration)."""
+    b = _burned(rate, cap, frac, t0)
+    before = b.snapshot(now=t0)
+    c = TokenBucket.restore(b.snapshot(now=t0), now=t0)
+    c.consume(c.tokens, now=t0)              # drain the migrant dry
+    c.set_rate(rate * 2.0, burst=cap * 0.5, now=t0)
+    after = b.snapshot(now=t0)
+    assert after == before                   # source untouched
+
+
+@settings(max_examples=60)
+@given(rate=_RATES, cap=_CAPS, frac=_FRACS, t0=_TIMES,
+       shrink=st.floats(min_value=0.1, max_value=1.0))
+def test_restore_clamps_level_to_capacity(rate, cap, frac, t0, shrink):
+    """A snapshot whose level exceeds the (possibly shrunk) capacity is
+    clamped: migration can never mint burst."""
+    b = _burned(rate, cap, frac, t0)
+    snap = b.snapshot(now=t0)
+    snap = dict(snap, capacity=snap["capacity"] * shrink)
+    c = TokenBucket.restore(snap, now=t0)
+    assert c.tokens <= c.capacity + 1e-9
+
+
+@settings(max_examples=60)
+@given(rate=_RATES, cap=_CAPS, frac=_FRACS, t0=_TIMES, dt=_TIMES)
+def test_restore_without_now_keeps_snapshot_clock(rate, cap, frac, t0, dt):
+    """restore(None) anchors to the snapshot's own timestamp (virtual
+    clocks must not be re-anchored to the wall clock), so refill resumes
+    exactly where the source left off."""
+    b = _burned(rate, cap, frac, t0)
+    snap = b.snapshot(now=t0)
+    c = TokenBucket.restore(snap, None)
+    assert c.updated == snap["updated"]
+    # advancing both clocks by dt refills both identically
+    assert c.wait_time(cap, now=t0 + dt) == \
+        pytest.approx(b.wait_time(cap, now=t0 + dt), rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=40)
+@given(rate=_RATES, cap=_CAPS, fracs=st.lists(_FRACS, min_size=1,
+                                              max_size=6))
+def test_level_never_negative_nor_above_capacity_under_traffic(rate, cap,
+                                                               fracs):
+    """Invariant the autopilot relies on: however traffic and transfers
+    interleave on the virtual clock, 0 <= level <= capacity."""
+    b = TokenBucket(rate, cap)
+    now = 0.0
+    for f in fracs:
+        now += f
+        b.drain(f * cap * 1.5, now=now)      # may overdraw: drain clamps
+        assert -1e-9 <= b.tokens <= b.capacity + 1e-9
+        b = TokenBucket.restore(b.snapshot(now=now), now=now)
+        assert -1e-9 <= b.tokens <= b.capacity + 1e-9

@@ -1,0 +1,549 @@
+"""Placement autopilot: the closed loop from load to *where* tenants run.
+
+Tier-1 exercises the whole loop — policies, gates, park/unpark lifecycle,
+plan application through the real ``EngineCluster``/``migrate`` machinery,
+and the bytes-plane CoreEngine migration — on a jit-free ``FakeEngine``
+that mirrors ServeEngine's slot/billing semantics exactly (admit bills
+prompt + first token, each decode step bills one token), so ledger
+conservation is asserted for real without a single compile. The jitted
+end-to-end scenarios live in tests/test_replay.py under `slow`.
+"""
+import pytest
+
+from repro.control.placement import (
+    ClusterView, Consolidate, PlacementController, PlacementPlan,
+    PlannedMove, SpreadHot, make_policy,
+)
+from repro.core.engine import CoreEngine
+from repro.core.nqe import CommOp
+from repro.serve.cluster import EngineCluster
+from repro.serve.scheduler import Request, TenantScheduler
+
+
+# ---------------------------------------------------------------------------
+# FakeEngine: ServeEngine's driving surface + billing, no jax compiles
+# ---------------------------------------------------------------------------
+
+
+class _Slot:
+    def __init__(self, req=None, remaining=0):
+        self.active = req is not None
+        self.req = req
+        self.remaining = remaining
+
+
+class FakeEngine:
+    """Slot-for-slot mirror of ServeEngine's admission/billing contract."""
+
+    def __init__(self, batch_slots=4):
+        self.B = batch_slots
+        self.scheduler = TenantScheduler(policy="wfq", charge_prompt=True)
+        self.controller = None
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.completed = []
+        self.decode_steps = 0
+
+    def submit(self, req):
+        self.scheduler.submit(req)
+
+    def inflight(self, tenant_id=None):
+        return sum(1 for s in self.slots if s.active and
+                   (tenant_id is None or s.req.tenant_id == tenant_id))
+
+    def step(self, now=None):
+        for i, s in enumerate(self.slots):
+            if s.active:
+                continue
+            req = self.scheduler.next_request(now)
+            if req is None:
+                break
+            req.generated.append(1)          # prefill's first token
+            self.scheduler.account(req.tenant_id, len(req.prompt) + 1)
+            if req.max_new_tokens <= 1:
+                self.completed.append(req)
+                continue
+            self.slots[i] = _Slot(req, req.max_new_tokens - 1)
+        active = [s for s in self.slots if s.active]
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            s.req.generated.append(1)
+            s.remaining -= 1
+            self.scheduler.account(s.req.tenant_id, 1)
+            if s.remaining <= 0:
+                self.completed.append(s.req)
+                self.slots[i] = _Slot()
+        if active:
+            self.decode_steps += 1
+        return len(active)
+
+
+def make_fake_cluster(n_engines=3, *, core_plane=False, **kw):
+    cores = [CoreEngine(enforcement="account") for _ in range(n_engines)] \
+        if core_plane else None
+    return EngineCluster([FakeEngine() for _ in range(n_engines)],
+                         core_engines=cores, **kw)
+
+
+def _req(tenant, k=0, tokens=6, now=0.0):
+    return Request(tenant_id=tenant, prompt=[1, 2], max_new_tokens=tokens,
+                   req_id=k, arrival=now)
+
+
+def _view(**kw):
+    base = dict(n_engines=3, parked=frozenset(), placement={},
+                draining=frozenset(), engine_load=(0.0, 0.0, 0.0),
+                demand={}, pending={}, queued_cost={},
+                inflight_remaining={})
+    base.update(kw)
+    return ClusterView(**base)
+
+
+# ---------------------------------------------------------------------------
+# park/unpark lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_park_requires_quiesced_engine_and_never_last():
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    with pytest.raises(ValueError):
+        cl.park(0)                 # hosts a tenant
+    cl.park(1)
+    assert cl.parked == {1}
+    with pytest.raises(ValueError):
+        cl.park(1)                 # already parked
+    with pytest.raises(ValueError):
+        cl.park(0)                 # would be the last awake engine
+    # parked engines are invisible to auto-placement and refuse placement
+    assert cl.add_tenant(5) == 0
+    with pytest.raises(ValueError):
+        cl.add_tenant(6, engine=1)
+    # ...and refuse migrations onto them
+    with pytest.raises(ValueError):
+        cl.migrate(0, 1)
+    cl.unpark(1)
+    with pytest.raises(ValueError):
+        cl.unpark(1)               # not parked anymore
+    assert cl.migrate(0, 1) is not None
+
+
+def test_parked_engines_do_not_step_and_cores_saved_accumulates():
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    cl.park(1)
+    cl.park(2)
+    cl.submit(_req(0))
+    for _ in range(4):
+        cl.step(now=0.1)
+    assert cl.engines[1].decode_steps == 0
+    assert cl.engines[2].decode_steps == 0
+    assert cl.parked_engine_steps == 8          # 2 engines x 4 steps
+    assert cl.cores_saved() == pytest.approx(2.0)
+    assert cl.max_parked == 2
+    counters = cl.counters()
+    assert counters["nk_cluster_parked"] == 2.0
+    assert counters["nk_cores_saved"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# consolidate policy
+# ---------------------------------------------------------------------------
+
+
+def test_consolidate_packs_idle_fleet_and_parks_the_rest():
+    v = _view(placement={0: 0, 1: 1, 2: 2},
+              demand={0: 1.0, 1: 1.0, 2: 1.0},
+              queued_cost={0: 0.0, 1: 0.0, 2: 0.0})
+    plan = Consolidate(ceiling=10.0).plan(v, 0.0)
+    assert {(m.tenant, m.src, m.dst) for m in plan.moves} == \
+        {(1, 1, 0), (2, 2, 0)}
+    assert plan.park == [1, 2] and plan.unpark == []
+
+
+def test_consolidate_is_sticky_in_steady_state():
+    """A fleet already packed under the ceiling plans zero moves."""
+    v = _view(placement={0: 0, 1: 0, 2: 1},
+              demand={0: 4.0, 1: 4.0, 2: 4.0}, parked=frozenset({2}))
+    plan = Consolidate(ceiling=10.0).plan(v, 0.0)
+    assert plan.moves == []
+    assert plan.park == [] and plan.unpark == []
+
+
+def test_consolidate_unparks_when_load_returns():
+    """Demand above one engine's ceiling wakes parked engines."""
+    v = _view(placement={0: 0, 1: 0, 2: 0}, parked=frozenset({1, 2}),
+              demand={0: 8.0, 1: 8.0, 2: 8.0})
+    plan = Consolidate(ceiling=10.0).plan(v, 0.0)
+    assert plan.unpark == [1, 2]
+    dsts = {m.tenant: m.dst for m in plan.moves}
+    assert dsts == {1: 1, 2: 2}                 # spread off the full engine
+    assert plan.park == []
+
+
+def test_consolidate_overload_spills_instead_of_refusing():
+    """Demand no engine set can fit still places every tenant."""
+    v = _view(placement={0: 0, 1: 1, 2: 2, 3: 0},
+              demand={0: 9.0, 1: 9.0, 2: 9.0, 3: 9.0})
+    plan = Consolidate(ceiling=10.0).plan(v, 0.0)
+    # nobody fits anywhere twice: the fourth tenant spills, none park
+    assert plan.park == []
+    assert len(plan.moves) <= 1                 # t3 may spill elsewhere
+    with pytest.raises(ValueError):
+        Consolidate(ceiling=0.0)
+
+
+def test_consolidate_never_moves_a_draining_tenant():
+    v = _view(placement={0: 0, 1: 1}, draining=frozenset({1}),
+              demand={0: 1.0, 1: 1.0})
+    plan = Consolidate(ceiling=10.0).plan(v, 0.0)
+    assert all(m.tenant != 1 for m in plan.moves)
+    assert 1 not in plan.park                   # its engine stays open
+
+
+# ---------------------------------------------------------------------------
+# spread_hot policy: bands, arming, usefulness
+# ---------------------------------------------------------------------------
+
+
+def test_spread_hot_moves_most_backlogged_off_hot_engine():
+    v = _view(placement={0: 0, 1: 0, 2: 1},
+              engine_load=(20.0, 1.0, 0.0),
+              pending={0: 15, 1: 3, 2: 1},
+              queued_cost={0: 120.0, 1: 24.0, 2: 8.0})
+    plan = SpreadHot().plan(v, 0.0)
+    assert [(m.tenant, m.src, m.dst) for m in plan.moves] == [(0, 0, 2)]
+
+
+def test_spread_hot_bands_ignore_small_or_balanced_loads():
+    p = SpreadHot(min_hot_load=8.0, enter_ratio=2.0)
+    # below the absolute floor: jitter, not a hotspot
+    v = _view(placement={0: 0, 1: 1}, engine_load=(5.0, 1.0, 0.0),
+              pending={0: 5, 1: 1})
+    assert p.plan(v, 0.0).empty
+    # above the floor but inside the ratio band: balanced enough
+    v = _view(placement={0: 0, 1: 1}, engine_load=(12.0, 8.0, 9.0),
+              pending={0: 12, 1: 8})
+    assert p.plan(v, 0.0).empty
+
+
+def test_spread_hot_disarms_moved_tenant_until_engine_cools():
+    """The hysteresis band: a hog whose queue keeps every engine it
+    touches hot migrates exactly once — no ping-pong, ever."""
+    p = SpreadHot(min_hot_load=8.0)
+    hot = _view(placement={0: 0, 1: 0, 2: 1, 3: 2},
+                engine_load=(50.0, 1.0, 1.0),
+                pending={0: 48, 1: 1, 2: 1, 3: 1})
+    plan = p.plan(hot, 0.0)
+    assert plan.moves[0].tenant == 0
+    p.notify_moved(0)
+    # the hog landed alone on engine 2 and heats it just the same: it is
+    # disarmed, so nothing moves, however long the hotspot persists
+    after = _view(placement={0: 2, 1: 0, 2: 1, 3: 1},
+                  engine_load=(1.0, 2.0, 50.0),
+                  pending={0: 48, 1: 1, 2: 1, 3: 1})
+    assert p.plan(after, 1.0).empty              # disarmed: no bounce
+    assert p.plan(after, 5.0).empty              # time alone never re-arms
+    # only a cooled engine re-arms the tenant
+    cooled = _view(placement={0: 2, 1: 0, 2: 0, 3: 1},
+                   engine_load=(30.0, 1.0, 2.0),
+                   pending={0: 1, 1: 28, 2: 1, 3: 1})
+    plan = p.plan(cooled, 6.0)
+    assert 0 not in p._disarmed
+    assert plan.moves and plan.moves[0].tenant == 1
+
+
+def test_spread_hot_refuses_useless_move_of_a_lone_hog():
+    """A hog alone on its engine has no co-tenant to relieve and moving
+    it cannot improve the balance: the plan must be empty."""
+    v = _view(placement={0: 0, 1: 1, 2: 2},
+              engine_load=(50.0, 2.0, 1.0),
+              pending={0: 48, 1: 2, 2: 1})
+    assert SpreadHot().plan(v, 0.0).empty
+
+
+def test_make_policy_registry():
+    assert isinstance(make_policy("spread_hot"), SpreadHot)
+    assert isinstance(make_policy("consolidate", ceiling=5.0), Consolidate)
+    with pytest.raises(KeyError):
+        make_policy("nope")
+    p = SpreadHot()
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy(p, ceiling=5.0)
+
+
+# ---------------------------------------------------------------------------
+# controller gates: cooldown + drain cost
+# ---------------------------------------------------------------------------
+
+
+class _OneMovePolicy:
+    name = "test"
+
+    def __init__(self, moves=(), park=(), unpark=()):
+        self.next_plan = PlacementPlan(moves=list(moves), park=list(park),
+                                       unpark=list(unpark))
+
+    def plan(self, view, now):
+        return PlacementPlan(moves=list(self.next_plan.moves),
+                             park=list(self.next_plan.park),
+                             unpark=list(self.next_plan.unpark))
+
+
+def test_cooldown_blocks_second_move_within_hysteresis_window():
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    pc = PlacementController(
+        cl, policy=_OneMovePolicy([PlannedMove(0, 0, 1, "test")]),
+        cooldown_s=3.0, drain_cost_factor=None)
+    pc.tick(now=0.0)
+    assert cl.placement[0] == 1
+    # the tenant wants to move again immediately: gated
+    pc.policy.next_plan = PlacementPlan(
+        moves=[PlannedMove(0, 1, 2, "test")])
+    pc.tick(now=1.0)
+    assert cl.placement[0] == 1
+    assert pc.moves_skipped_cooldown == 1
+    pc.tick(now=3.5)                             # window expired
+    assert cl.placement[0] == 2
+    pc.assert_no_ping_pong()
+    # and the invariant checker actually bites on a violating log
+    pc.move_log.append((3.6, PlannedMove(0, 2, 0, "test")))
+    with pytest.raises(AssertionError):
+        pc.assert_no_ping_pong()
+
+
+def test_drain_cost_gate_skips_expensive_moves():
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    mv = PlannedMove(0, 0, 1, "test", expected_gain=10.0, drain_cost=25.0)
+    pc = PlacementController(cl, policy=_OneMovePolicy([mv]),
+                             cooldown_s=0.0, drain_cost_factor=1.0)
+    pc.tick(now=0.0)
+    assert cl.placement[0] == 0
+    assert pc.moves_skipped_drain == 1
+    # disabling the gate lets the same move through
+    pc2 = PlacementController(cl, policy=_OneMovePolicy([mv]),
+                              cooldown_s=0.0, drain_cost_factor=None)
+    pc2.tick(now=0.0)
+    assert cl.placement[0] == 1
+
+
+def test_gated_move_cancels_dependent_park_and_unpark():
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    cl.park(2)
+    mv = PlannedMove(0, 0, 2, "test", expected_gain=0.0, drain_cost=9.0)
+    pol = _OneMovePolicy([mv], park=[0], unpark=[2])
+    pc = PlacementController(cl, policy=pol, cooldown_s=0.0,
+                             drain_cost_factor=1.0)
+    pc.tick(now=0.0)
+    # the move was drain-gated, so engine 0 still hosts the tenant (no
+    # park) and waking engine 2 would have served nobody (no unpark)
+    assert cl.placement[0] == 0
+    assert cl.parked == {2}
+
+
+# ---------------------------------------------------------------------------
+# the closed loop on a live (fake) cluster
+# ---------------------------------------------------------------------------
+
+
+def _pump(cl, loads, vt, seconds, dt=0.25):
+    """Submit per-tenant request loads (req/s) and step the cluster."""
+    import itertools
+    frac = {t: 0.0 for t in loads}
+    ids = itertools.count(1000)
+    end = vt + seconds
+    while vt < end - 1e-9:
+        for t, rps in loads.items():
+            frac[t] += rps * dt
+            while frac[t] >= 1.0:
+                frac[t] -= 1.0
+                cl.submit(_req(t, k=next(ids), now=vt))
+        cl.step(now=vt)
+        vt += dt
+    return vt
+
+
+def test_closed_loop_consolidation_parks_and_unparks():
+    """Busy -> idle -> busy on a fake 3-engine cluster: the autopilot
+    packs the idle fleet, parks engines (cores saved), and wakes them
+    when load returns — zero ping-pong throughout."""
+    cl = make_fake_cluster(3, place_every=4)
+    pc = PlacementController(cl, policy="consolidate", ceiling=30.0,
+                             cooldown_s=2.0, alpha=1.0)
+    cl.attach_autopilot(pc)
+    for t in range(3):
+        cl.add_tenant(t, engine=t)
+    busy = {t: 3.0 for t in range(3)}           # 3 req/s x 8 tok = 24 tok/s
+    idle = {t: 0.25 for t in range(3)}
+    vt = _pump(cl, busy, 0.0, 4.0)
+    assert cl.parked == set()                    # busy fleet needs everyone
+    vt = _pump(cl, idle, vt, 6.0)
+    assert len(cl.parked) >= 1                   # the cores-saved window
+    assert cl.cores_saved() > 0
+    packed = set(cl.placement.values())
+    assert len(packed) == 1                      # fleet fits one engine
+    saved_at_idle = cl.parked_engine_steps
+    vt = _pump(cl, busy, vt, 6.0)
+    assert cl.parked == set()                    # load returned: all awake
+    assert len(set(cl.placement.values())) == 3  # spread again
+    assert cl.parked_engine_steps >= saved_at_idle
+    pc.assert_no_ping_pong()
+    for t in range(3):
+        cl.assert_ledger_conservation(t)
+
+
+def test_closed_loop_hotspot_migrates_hog_once():
+    """A mid-run hog heats its engine; spread_hot moves it (and only it,
+    and only once) to the coolest engine."""
+    cl = make_fake_cluster(3, place_every=4)
+    pc = PlacementController(cl, policy="spread_hot", min_hot_load=6.0,
+                             cooldown_s=2.0, alpha=1.0)
+    cl.attach_autopilot(pc)
+    cl.add_tenant(0, engine=0)
+    cl.add_tenant(1, engine=1)
+    cl.add_tenant(2, engine=2)
+    cl.add_tenant(3, engine=0)                   # future hog, shares e0
+    calm = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    vt = _pump(cl, calm, 0.0, 3.0)
+    assert cl.migrations_started == 0
+    hot = {0: 1.0, 1: 1.0, 2: 1.0, 3: 30.0}     # way past 4 slots/engine
+    vt = _pump(cl, hot, vt, 8.0)
+    moved = [mv.tenant for _, mv in pc.move_log]
+    # the hog moved away from its engine exactly once; its new neighbour
+    # may evacuate once (de-colocation), but nobody moves twice
+    assert moved.count(3) == 1
+    assert cl.placement[3] != 0                  # the hog left its engine
+    assert len(moved) == len(set(moved))
+    # the loop went quiet: more hot time adds no migrations
+    before = len(pc.move_log)
+    vt = _pump(cl, hot, vt, 6.0)
+    assert len(pc.move_log) == before
+    pc.assert_no_ping_pong()
+    for t in range(4):
+        cl.assert_ledger_conservation(t)
+
+
+# ---------------------------------------------------------------------------
+# apply_plan: stale entries, conservation, record plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_apply_plan_skips_stale_moves_and_parks_only_quiesced():
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    cl.add_tenant(1, engine=1)
+    plan = PlacementPlan(moves=[
+        PlannedMove(0, 0, 1, "test"),
+        PlannedMove(7, 0, 1, "test"),            # unknown tenant: stale
+        PlannedMove(1, 0, 2, "test"),            # wrong src: stale
+    ], park=[0, 1])
+    recs = cl.apply_plan(plan, now=0.0)
+    assert [r.tenant for r in recs] == [0]
+    assert cl.placement == {0: 1, 1: 1}
+    assert cl.parked == {0}                      # engine 1 is not quiesced
+
+
+def test_rebalance_is_a_thin_wrapper_with_legacy_semantics():
+    """The deprecated one-shot keeps its contract: hottest -> coolest,
+    most-backlogged victim, None when balanced, KeyError/RuntimeError on
+    bad pins — but the selection logic now lives in the policy."""
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    cl.add_tenant(1, engine=0)
+    cl.add_tenant(2, engine=1)
+    for k in range(6):
+        cl.submit(_req(0, k=k))
+    for k in range(2):
+        cl.submit(_req(1, k=10 + k))
+    cl.submit(_req(2, k=20))
+    rec = cl.rebalance(now=0.0)
+    assert rec is not None
+    assert rec.tenant == 0 and rec.src == 0 and rec.dst == 2
+    # balanced cluster (same loads everywhere): no-op
+    cl2 = make_fake_cluster(2)
+    cl2.add_tenant(0, engine=0)
+    cl2.add_tenant(1, engine=1)
+    assert cl2.rebalance() is None
+    # bad pins keep migrate()'s error contract
+    with pytest.raises(KeyError):
+        cl.rebalance(tenant=99)
+    # pinned tenant moves from wherever it is
+    rec = cl.rebalance(tenant=1, now=0.0)
+    assert rec is not None and rec.tenant == 1
+
+
+# ---------------------------------------------------------------------------
+# bytes plane: CoreEngine migration rides the same plan
+# ---------------------------------------------------------------------------
+
+
+def _op(tenant, nbytes=1000):
+    return CommOp(verb="psum", axes=("pod",), tenant_id=tenant,
+                  size_bytes=nbytes)
+
+
+def test_core_engine_export_import_moves_bucket_and_folds_ledger():
+    src, dst = CoreEngine(enforcement="account"), \
+        CoreEngine(enforcement="account")
+    src.set_tenant_rate(1, 10000.0, burst=5000.0)
+    for _ in range(3):
+        op = _op(1)
+        src.admit(op, now=0.0)
+        src.route(op)
+    level = src.buckets[1].tokens
+    assert level == pytest.approx(2000.0)        # 5000 burst - 3x1000
+    assert src.total_bytes(1) == 3000
+    state = src.export_tenant(1, now=0.0)
+    # the source forgot everything
+    assert src.total_bytes(1) == 0 and 1 not in src.buckets
+    assert 1 not in src.admitted
+    # exported counters are the carried ledger
+    assert sum(b for _, b in state["ledger"].values()) == 3000
+    assert state["admitted"][1] == 3000          # all in-rate
+    dst.import_tenant(1, state, now=0.0)
+    # the bucket level travelled; the counters did NOT replay
+    assert dst.buckets[1].tokens == pytest.approx(level)
+    assert dst.total_bytes(1) == 0
+    with pytest.raises(ValueError):
+        dst.import_tenant(1, state)              # non-quiesced destination
+
+
+def test_cluster_migration_carries_bytes_plane_conserved():
+    """One plan moves both planes: serve-side ledger conservation AND
+    bytes-plane continuity are asserted on the same migrate()."""
+    cl = make_fake_cluster(2, core_plane=True)
+    cl.add_tenant(0, engine=0)
+    # zero-rate bucket: the level can only burn down, so the transferred
+    # balance is deterministic (no refill between admit and migrate)
+    cl.core_engines[0].set_tenant_rate(0, 0.0, burst=20000.0)
+    for _ in range(5):
+        op = _op(0, 2048)
+        cl.core_engines[0].admit(op, now=0.0)
+        cl.core_engines[0].route(op)
+    cl.submit(_req(0))
+    cl.step(now=0.1)
+    total_before = cl.tenant_core_bytes(0)
+    assert total_before == 5 * 2048
+    level = cl.core_engines[0].buckets[0].tokens
+    rec = cl.migrate(0, 1, now=0.2)
+    assert rec is not None
+    # bytes continuity across the move, and the bucket level travelled
+    assert cl.tenant_core_bytes(0) == total_before
+    assert cl.core_engines[1].buckets[0].tokens == pytest.approx(level)
+    assert cl.core_engines[0].total_bytes(0) == 0
+    # new traffic accrues on the destination, continuity holds
+    op = _op(0, 1024)
+    cl.core_engines[1].admit(op, now=0.3)
+    cl.core_engines[1].route(op)
+    assert cl.tenant_core_bytes(0) == total_before + 1024
+    cl.assert_ledger_conservation(0)
+
+
+def test_core_engines_must_pair_with_engines():
+    with pytest.raises(ValueError):
+        EngineCluster([FakeEngine()], core_engines=[CoreEngine(),
+                                                    CoreEngine()])

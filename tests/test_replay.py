@@ -167,6 +167,61 @@ def test_replay_migrate_hog_mid_burst_conserves_ledger():
 
 
 @pytest.mark.slow
+def test_replay_consolidation_scenario_parks_and_recovers():
+    """The closed placement loop on real engines: busy -> idle -> busy.
+    The autopilot packs the idle fleet, parks >= 1 engine (cores saved),
+    and wakes the cluster when load returns — fairness intact."""
+    rep = replay_scenario("consolidation", n_tenants=4, intervals=12,
+                          engines=3)
+    assert rep.engines == 3
+    assert rep.max_parked >= 1                    # idle window parked
+    assert rep.cores_saved > 0
+    assert rep.autopilot_moves >= 1               # the loop found the pack
+    assert rep.jain() >= 0.95
+    # load returned: every tenant is placed and served
+    assert all(r.achieved_rate > 0 for r in rep.per_tenant.values())
+    with pytest.raises(ValueError):
+        replay_scenario("consolidation", n_tenants=4, intervals=4,
+                        engines=1)
+
+
+@pytest.mark.slow
+def test_replay_hotspot_autopilot_migrates_hog_both_planes():
+    """The developing hog is auto-migrated by the closed loop — no
+    operator event anywhere — with ledger conservation on the serve AND
+    bytes planes and zero ping-pong under hysteresis."""
+    from repro.core.nqe import CommOp
+    from repro.serve.replay import make_replay_cluster
+
+    n, intervals = 4, 14
+    trace, cap = scenario_spec("hotspot", n_tenants=n, intervals=intervals)
+    cl = make_replay_cluster(capacity=cap, engines=3,
+                             autopilot="spread_hot", core_plane=True)
+    pumped = {}
+
+    def pump(cluster, now):
+        for t, k in sorted(cluster.placement.items()):
+            op = CommOp(verb="psum", axes=("pod",), tenant_id=t,
+                        size_bytes=2048)
+            cluster.core_engines[k].admit(op, now)
+            cluster.core_engines[k].route(op)
+            pumped[t] = pumped.get(t, 0) + 2048
+
+    rep = TraceReplayer(cl, capacity=cap).run(
+        trace, events=[(i, pump) for i in range(intervals)])
+    hog = n - 1
+    moved = [mv.tenant for _, mv in cl.autopilot.move_log]
+    assert moved.count(hog) == 1                  # auto-migrated, once
+    assert len(moved) == len(set(moved))          # nobody moved twice
+    cl.autopilot.assert_no_ping_pong()
+    assert rep.autopilot_moves == len(moved)
+    for t in range(n):
+        cl.assert_ledger_conservation(t)          # serve plane
+        assert cl.tenant_core_bytes(t) == pumped[t]   # bytes plane
+    assert rep.jain() >= 0.95
+
+
+@pytest.mark.slow
 def test_replay_delta_push_is_quiet_on_stable_trace():
     """Delta-based push: on a steady trace the controller issues a small
     fraction of full-push set_rate calls — O(changed), not O(tenants)."""

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Gate a bench_fairness --json result against committed thresholds.
+
+    python tools/check_bench.py RESULTS.json benchmarks/bench_thresholds.json
+
+Thresholds map metric names (the bench's "section,metric" row names) to
+{"min": x} / {"max": x} bounds (inclusive). A metric missing from the
+results is a failure too — a silently dropped bench must not pass the
+gate. Keys starting with "_" are comments. Stdlib only, exit 1 with a
+listing on any violation.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check(results: dict, thresholds: dict) -> list:
+    metrics = results.get("metrics", {})
+    problems = []
+    for name, bound in thresholds.items():
+        if name.startswith("_"):
+            continue
+        if name not in metrics:
+            problems.append(f"{name}: missing from results")
+            continue
+        v = metrics[name]
+        if "min" in bound and v < bound["min"]:
+            problems.append(f"{name}: {v:.4f} < min {bound['min']}")
+        if "max" in bound and v > bound["max"]:
+            problems.append(f"{name}: {v:.4f} > max {bound['max']}")
+    if not results.get("ok", False):
+        problems.append("bench reported ok=false (a claim failed)")
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__.strip())
+        return 2
+    results = json.loads(pathlib.Path(argv[0]).read_text())
+    thresholds = json.loads(pathlib.Path(argv[1]).read_text())
+    problems = check(results, thresholds)
+    if problems:
+        print("bench regression vs committed thresholds:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n = sum(1 for k in thresholds if not k.startswith("_"))
+    print(f"all {n} thresholds hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
