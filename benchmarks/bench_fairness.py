@@ -30,8 +30,10 @@ served-token ledger is conserved (no loss, no double-billing).
 
 ``--e2e --engines N --autopilot`` closes the placement loop: claim (f) —
 on the ``consolidation`` scenario the PlacementController packs the idle
-fleet and parks >= 1 engine (cores saved > 0), waking it when load
-returns; claim (g) — on ``hotspot`` it auto-migrates the developing hog
+fleet and parks >= 1 engine (cores saved > 0 AND memory saved > 0: a
+parked engine suspends, dropping its KV-cache/slot buffers — reported as
+``mem_saved_bytes`` / ``max_parked_bytes`` / peak resident cache bytes),
+waking it when load returns; claim (g) — on ``hotspot`` it auto-migrates the developing hog
 with Jain >= 0.95 and isolation < 5%, ledger conservation asserted on
 every applied plan on BOTH planes (serve tokens and collective bytes —
 the cluster runs with a bytes-plane CoreEngine per engine and synthetic
@@ -243,7 +245,8 @@ def run_e2e_multi_engine(engines: int = 3) -> Dict:
     moved: Dict = {}
 
     def rebalance_event(cl, now):
-        rec = cl.rebalance(now=now)
+        from repro.serve.replay import operator_rebalance
+        rec = operator_rebalance(cl, now=now)
         if rec is not None:
             moved["rec"] = rec
             moved["ledger_at_move"] = cl.tenant_served_tokens(rec.tenant)
@@ -321,15 +324,19 @@ def _byte_pump(cluster, op_bytes=4096):
 
 def _conservation_rows(prefix, cluster, pumped, n_tenants):
     """Serve-plane ledger == request ground truth AND bytes-plane carried
-    + live == total pumped, for every tenant. Returns (rows, all_ok)."""
-    serve_ok = bytes_ok = True
+    + live == total pumped, for every tenant. Asserted per plane so a
+    failure row names the plane that actually broke. Returns
+    (rows, all_ok)."""
+    ok = {"serve": True, "bytes": True}
     for t in range(n_tenants):
-        try:
-            cluster.assert_ledger_conservation(t)
-        except AssertionError:
-            serve_ok = False
+        for plane in cluster.planes:
+            try:
+                plane.ledger.assert_conservation(t, plane=plane.name)
+            except AssertionError:
+                ok[plane.name] = False
         if cluster.tenant_core_bytes(t) != pumped.get(t, 0):
-            bytes_ok = False
+            ok["bytes"] = False
+    serve_ok, bytes_ok = ok["serve"], ok["bytes"]
     rows = [(f"{prefix},serve_ledger_conserved", 1.0 if serve_ok else 0.0),
             (f"{prefix},bytes_ledger_conserved", 1.0 if bytes_ok else 0.0)]
     return rows, serve_ok and bytes_ok
@@ -348,10 +355,11 @@ def run_e2e_consolidation(engines: int = 3,
     """Claim (f): the closed placement loop consolidates an idle fleet.
 
     Busy -> idle window -> busy. The ``consolidate`` policy packs the
-    idle tenants onto one engine and parks the rest (cores saved — the
-    paper's multiplexing claim, closed-loop), wakes them when load
-    returns, never ping-pongs a tenant, and conserves both planes'
-    ledgers on every applied plan.
+    idle tenants onto one engine and parks the rest — saving cores (the
+    paper's multiplexing claim, closed-loop) AND memory (parked engines
+    suspend: KV-cache and slot buffers dropped, lazily re-materialized
+    on unpark) — wakes them when load returns, never ping-pongs a
+    tenant, and conserves both planes' ledgers on every applied plan.
     """
     from repro.serve.replay import TraceReplayer, scenario_spec
     n = E2E_TENANTS
@@ -368,17 +376,25 @@ def run_e2e_consolidation(engines: int = 3,
     rows = [("e2e_consolidation,jain_index", jain),
             ("e2e_consolidation,cores_saved", rep.cores_saved),
             ("e2e_consolidation,max_parked", float(rep.max_parked)),
+            ("e2e_consolidation,mem_saved_bytes", rep.mem_saved_bytes),
+            ("e2e_consolidation,max_parked_bytes",
+             float(rep.max_parked_bytes)),
+            ("e2e_consolidation,peak_resident_cache_bytes",
+             float(rep.peak_resident_cache_bytes)),
             ("e2e_consolidation,autopilot_moves",
              float(rep.autopilot_moves)),
             ("e2e_consolidation,live_migrations", float(rep.migrations)),
             ("e2e_consolidation,parked_at_end", float(len(cl.parked))),
             ("e2e_consolidation,ping_pong_free", pp_free)] + cons_rows
     ok = (jain >= 0.95 and rep.cores_saved > 0 and rep.max_parked >= 1
+          and rep.mem_saved_bytes > 0 and rep.max_parked_bytes > 0
           and pp_free == 1.0 and conserved)
     return {"rows": rows, "ok": ok,
             "claim": f"autopilot parked {rep.max_parked} engine(s) in the "
-                     f"idle window (avg {rep.cores_saved:.2f} cores saved"
-                     f"/step), Jain {jain:.3f} >= 0.95, "
+                     f"idle window (avg {rep.cores_saved:.2f} cores and "
+                     f"{rep.mem_saved_bytes / 1024:.0f} KiB saved/step, "
+                     f"peak {rep.max_parked_bytes / 1024:.0f} KiB freed), "
+                     f"Jain {jain:.3f} >= 0.95, "
                      f"{rep.autopilot_moves} moves, 0 ping-pong, both "
                      f"planes conserved"}
 

@@ -11,7 +11,7 @@ fairness/isolation bounds hold and the served-token ledger is conserved.
 The guest never notices: it keeps submitting, the placement map routes.
 """
 from repro.serve.replay import (
-    TraceReplayer, make_replay_cluster, scenario_spec,
+    TraceReplayer, make_replay_cluster, operator_rebalance, scenario_spec,
 )
 
 trace, cap = scenario_spec("migration", n_tenants=4, intervals=12)
@@ -21,7 +21,9 @@ log = []
 
 
 def rebalance(cl, now):
-    log.append(cl.rebalance(now=now))
+    # the one-shot operator move: PlacementController.plan_once(force=True)
+    # under the hood (EngineCluster.rebalance() is deprecated)
+    log.append(operator_rebalance(cl, now=now))
 
 
 print(f"cluster: 3 engines, one shared {cap:.0f} tok/s bottleneck; "

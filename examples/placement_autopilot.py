@@ -7,9 +7,11 @@ tenants through a busy -> idle -> busy window. A PlacementController
 (`consolidate` policy) runs on a cadence next to the rate loop: when the
 fleet goes idle it packs every tenant onto one engine and PARKS the other
 two — the paper's multiplexing claim ("save cores by sharing stack
-modules"), closed-loop — then wakes them when load returns. Every move
-runs through migrate()'s ledger-conserving drain-and-transfer; no tenant
-ever moves twice within the hysteresis window.
+modules"), closed-loop — then wakes them when load returns. Parking is a
+real suspend: the parked engines drop their KV-caches and slot buffers
+(memory saved, not just cores), lazily re-initialized on unpark. Every
+move runs through migrate()'s ledger-conserving drain-and-transfer; no
+tenant ever moves twice within the hysteresis window.
 """
 from repro.serve.replay import TraceReplayer, make_replay_cluster, \
     scenario_spec
@@ -48,11 +50,16 @@ for when, mv in pilot.move_log:
 pilot.assert_no_ping_pong()
 print(f"\ncores saved: {rep.cores_saved:.2f} engines/step on average "
       f"(peak {rep.max_parked} parked); Jain {rep.jain():.3f}")
+print(f"mem saved:   {rep.mem_saved_bytes / 1024:.1f} KiB/step on average "
+      f"(peak {rep.max_parked_bytes / 1024:.1f} KiB freed while parked, "
+      f"of {rep.peak_resident_cache_bytes / 1024:.1f} KiB peak resident "
+      f"KV-cache)")
 for t in sorted(rep.per_tenant):
     cluster.assert_ledger_conservation(t)
 print("served-token ledger conserved for every tenant across "
       f"{rep.migrations} live migration(s)")
 print("\nplacement counters (excerpt):")
 for line in cluster.export_prometheus().splitlines():
-    if "placement" in line or "parked" in line or "cores" in line:
+    if any(k in line for k in ("placement", "parked", "cores", "mem_",
+                               "bytes_freed", "resident")):
         print("  " + line)

@@ -32,7 +32,10 @@ Two gates apply to every planned move, independent of policy:
 
 The controller is duck-typed over ``EngineCluster`` (anything with
 ``engines``, ``placement``, ``draining``, ``parked``, ``engine_load``,
-``apply_plan``) so policies can be unit-tested on a hand-built
+``apply_plan``), and reads per-tenant pressure through the serve module's
+``StackModule.tenant_load`` (repro.fabric) — the drain-cost gate prices
+moves from the same protocol surface migration uses, never from a
+concrete engine's slots — so policies can be unit-tested on a hand-built
 ``ClusterView`` with no jitted engines anywhere near the test.
 """
 from __future__ import annotations
@@ -428,7 +431,12 @@ class PlacementController:
 
     # -- observation --------------------------------------------------------
     def view(self, now: Optional[float] = None) -> ClusterView:
-        """Sample telemetry and snapshot the cluster for the policy."""
+        """Sample telemetry and snapshot the cluster for the policy.
+
+        Per-tenant pressure comes from the serve module's
+        ``StackModule.tenant_load`` — the same protocol surface migration
+        uses — so the controller never reaches into a concrete engine's
+        slot machinery."""
         obs = merge_obs([tel.update(now) for tel in self._tel])
         cl = self.cluster
         demand = {t: obs[t].rate if t in obs else 0.0
@@ -437,12 +445,10 @@ class PlacementController:
         queued: Dict[int, float] = {}
         inflight: Dict[int, float] = {}
         for t, k in cl.placement.items():
-            sched = cl.engines[k].scheduler
-            pending[t] = sched.pending(t)
-            queued[t] = float(sched.queued_cost(t))
-            inflight[t] = float(sum(
-                s.remaining for s in getattr(cl.engines[k], "slots", ())
-                if s.active and s.req.tenant_id == t))
+            tl = cl.engines[k].tenant_load(t)
+            pending[t] = tl.pending
+            queued[t] = float(tl.queued_tokens)
+            inflight[t] = float(tl.inflight_tokens)
         return ClusterView(
             n_engines=len(cl.engines),
             parked=frozenset(getattr(cl, "parked", ())),

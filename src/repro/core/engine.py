@@ -26,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.nqe import CommOp, describe, payload_bytes
 from repro.core.nsm import Nsm, get_nsm
+from repro.fabric import StackModule, TenantState
 
 Rule = Tuple[str, Callable[[CommOp], bool], str]   # (name, predicate, nsm)
 
@@ -134,8 +135,20 @@ class TokenBucket:
 ENFORCEMENT_MODES = ("off", "account", "defer")
 
 
-class CoreEngine:
-    """Routes CommOps to NSMs; accounts and isolates tenants."""
+class CoreEngine(StackModule):
+    """Routes CommOps to NSMs; accounts and isolates tenants.
+
+    Implements the bytes-plane half of the ``StackModule`` protocol
+    (repro.fabric): tenant export/import with bucket-level transfer,
+    flattened carried counters, and a monotonic ``billed`` ground-truth
+    counter that never migrates — the conservation reference
+    ``ConservationLedger`` checks carried+live ledgers against.
+    """
+
+    plane = "bytes"
+    ledger_fields = ("ops", "bytes", "deferred_ops", "deferred_bytes",
+                     "admitted_ops", "admitted_bytes", "admit_wait_s")
+    conserved_field = "bytes"
 
     def __init__(self, mesh=None, default_nsm: str = "xla",
                  enforcement: str = "off"):
@@ -152,6 +165,12 @@ class CoreEngine:
         # the "admission latency" column the replay harness reads
         self.admitted: Dict[int, LedgerEntry] = defaultdict(LedgerEntry)
         self.admit_wait_s: Dict[int, float] = defaultdict(float)
+        # per-tenant bytes ever routed HERE — the bytes plane's billed
+        # ground truth. Never exported by a migration (the analog of the
+        # serve plane's completed-request records staying on the engine
+        # that served them), so carried + live ledgers must equal its sum
+        # over all engines at every instant: the conservation invariant.
+        self.billed: Dict[int, int] = defaultdict(int)
         self.route_log: List[Tuple[bytes, str]] = []
         self.throttle_log: List[Tuple[int, float, float]] = []
         self.buckets: Dict[int, TokenBucket] = {}
@@ -244,6 +263,7 @@ class CoreEngine:
             e = self.ledger[(op.tenant_id, op.verb, op.axes)]
             e.ops += 1
             e.bytes += op.size_bytes
+            self.billed[op.tenant_id] += op.size_bytes
             self.route_log.append((op.pack(), choice))
         return get_nsm(choice)
 
@@ -272,20 +292,45 @@ class CoreEngine:
         return fn(x, tuple(axes), axis_sizes=self.axis_sizes(), op=op, **kw)
 
     # --- migration (bytes-plane half of live tenant migration) -----------
+    def _live_state(self, tenant_id: int) -> List[str]:
+        """Names of the live bytes-plane state a tenant holds here (empty
+        = quiesced). Callers hold ``self._lock``."""
+        live = []
+        if tenant_id in self.buckets:
+            live.append("bucket")
+        if any(k[0] == tenant_id for k in self.ledger):
+            live.append("ledger")
+        if any(k[0] == tenant_id for k in self.deferred):
+            live.append("deferred")
+        if tenant_id in self.admitted:
+            live.append("admitted")
+        if tenant_id in self.admit_wait_s:
+            live.append("admit_wait_s")
+        return live
+
+    def has_tenant(self, tenant_id: int) -> bool:
+        """True iff the tenant holds ANY live bytes-plane state here —
+        the quiesced-destination check a migration runs before its
+        destructive export."""
+        with self._lock:
+            return bool(self._live_state(tenant_id))
+
     def export_tenant(self, tenant_id: int,
-                      now: Optional[float] = None) -> Dict:
+                      now: Optional[float] = None) -> TenantState:
         """Atomically remove a tenant's bytes-plane state and return it.
 
         Mirrors ``TenantScheduler.export_tenant`` for the collective
         fabric: the tenant's token-bucket *level* travels (a move can
         never reopen a fresh burst of bytes), and the cumulative ledger /
-        deferred / admitted counters are handed to the caller to *carry*
-        — ``import_tenant`` deliberately does not replay them into the
-        destination engine, where the jump would read as a rate spike to
-        ``EngineTelemetry`` (the same counter-reset discipline the
-        scheduler plane uses). Conservation: carried + both engines' live
-        counters must be unchanged across the move; ``EngineCluster``
-        asserts exactly that on every plan.
+        deferred / admitted counters flatten into ``TenantState.carried``
+        for the caller to fold — ``import_tenant`` deliberately does not
+        replay them into the destination engine, where the jump would
+        read as a rate spike to ``EngineTelemetry`` (the same
+        counter-reset discipline the scheduler plane uses). The
+        per-(verb, axes) breakdown rides in ``payload`` for audit.
+        Conservation: carried + both engines' live counters must be
+        unchanged across the move; ``ConservationLedger`` asserts exactly
+        that on every plan.
         """
         with self._lock:
             ledger = {}
@@ -297,34 +342,118 @@ class CoreEngine:
                 e = self.deferred.pop(key)
                 deferred[key[1]] = (e.ops, e.bytes)
             adm = self.admitted.pop(tenant_id, None)
-            state = {
-                "bucket": (self.buckets[tenant_id].snapshot(now)
-                           if tenant_id in self.buckets else None),
-                "ledger": ledger,                   # (verb, axes) -> (ops, b)
-                "deferred": deferred,               # axes -> (ops, bytes)
-                "admitted": (adm.ops, adm.bytes) if adm else (0, 0),
-                "admit_wait_s": self.admit_wait_s.pop(tenant_id, 0.0),
-            }
+            wait = self.admit_wait_s.pop(tenant_id, 0.0)
+            state = TenantState(
+                plane="bytes",
+                bucket=(self.buckets[tenant_id].snapshot(now)
+                        if tenant_id in self.buckets else None),
+                carried={
+                    "ops": sum(o for o, _ in ledger.values()),
+                    "bytes": sum(b for _, b in ledger.values()),
+                    "deferred_ops": sum(o for o, _ in deferred.values()),
+                    "deferred_bytes": sum(b for _, b in deferred.values()),
+                    "admitted_ops": adm.ops if adm else 0,
+                    "admitted_bytes": adm.bytes if adm else 0,
+                    "admit_wait_s": wait,
+                },
+                payload={
+                    "ledger": ledger,               # (verb, axes) -> (ops, b)
+                    "deferred": deferred,           # axes -> (ops, bytes)
+                    "admitted": (adm.ops, adm.bytes) if adm else (0, 0),
+                })
             self.buckets.pop(tenant_id, None)
         return state
 
-    def import_tenant(self, tenant_id: int, state: Dict,
+    def import_tenant(self, tenant_id: int, state: TenantState,
                       now: Optional[float] = None) -> None:
         """Install a migrated tenant's bytes-plane state.
 
         Only the enforcement state (the bucket, at its transferred level,
         anchored at ``now``) lands here; the exported counters stay with
         the operator's carried ledger — see ``export_tenant``.
+
+        Refuses a destination holding ANY live state for the tenant —
+        not just a bucket: an unbucketed tenant with live ledger or
+        deferred entries here would merge silently and corrupt byte
+        continuity (the carried+live invariant would double-count its
+        history on the next export).
         """
+        if state.plane != self.plane:
+            # bucket snapshots are shape-identical across planes: without
+            # this guard a tokens-denominated level would silently install
+            # as a bytes/s bucket
+            raise ValueError(
+                f"cannot import a {state.plane!r}-plane TenantState into "
+                f"the {self.plane} plane")
         with self._lock:
-            if tenant_id in self.buckets:
+            live = self._live_state(tenant_id)
+            if live:
                 raise ValueError(
-                    f"tenant {tenant_id} already has a bucket on this "
-                    f"engine; bytes-plane migration requires a quiesced "
-                    f"destination")
-            if state.get("bucket") is not None:
+                    f"tenant {tenant_id} has live bytes-plane state on "
+                    f"this engine ({', '.join(live)}); migration "
+                    f"requires a quiesced destination")
+            if state.bucket is not None:
                 self.buckets[tenant_id] = TokenBucket.restore(
-                    state["bucket"], now)
+                    state.bucket, now)
+
+    def live_counters(self, fld: str) -> Dict[int, float]:
+        """Live per-tenant totals for one ``ledger_fields`` entry,
+        flattened from the per-(verb, axes) detail under the lock."""
+        with self._lock:
+            out: Dict[int, float] = defaultdict(float)
+            if fld in ("ops", "bytes"):
+                for (t, _, _), e in self.ledger.items():
+                    out[t] += e.ops if fld == "ops" else e.bytes
+            elif fld in ("deferred_ops", "deferred_bytes"):
+                for (t, _), e in self.deferred.items():
+                    out[t] += e.ops if fld == "deferred_ops" else e.bytes
+            elif fld in ("admitted_ops", "admitted_bytes"):
+                for t, e in self.admitted.items():
+                    out[t] += e.ops if fld == "admitted_ops" else e.bytes
+            elif fld == "admit_wait_s":
+                for t, w in self.admit_wait_s.items():
+                    out[t] += w
+            else:
+                raise KeyError(f"unknown bytes ledger field {fld!r}")
+            return dict(out)
+
+    def live_counter(self, tenant_id: int, fld: str) -> float:
+        """One tenant's live total for one field — tallied directly under
+        the lock (the migration hot path; no full-dict materialization)."""
+        with self._lock:
+            if fld in ("ops", "bytes"):
+                return float(sum(
+                    e.ops if fld == "ops" else e.bytes
+                    for (t, _, _), e in self.ledger.items()
+                    if t == tenant_id))
+            if fld in ("deferred_ops", "deferred_bytes"):
+                return float(sum(
+                    e.ops if fld == "deferred_ops" else e.bytes
+                    for (t, _), e in self.deferred.items()
+                    if t == tenant_id))
+            if fld in ("admitted_ops", "admitted_bytes"):
+                e = self.admitted.get(tenant_id)
+                if e is None:
+                    return 0.0
+                return float(e.ops if fld == "admitted_ops" else e.bytes)
+            if fld == "admit_wait_s":
+                return float(self.admit_wait_s.get(tenant_id, 0.0))
+            raise KeyError(f"unknown bytes ledger field {fld!r}")
+
+    def billed_ground_truth(self, tenant_id: int) -> float:
+        """Bytes ever routed for the tenant on THIS engine — monotonic,
+        never exported, the migration-invariant conservation reference."""
+        with self._lock:
+            return float(self.billed.get(tenant_id, 0))
+
+    def suspend(self) -> int:
+        """Bytes-plane park: the switch holds no accelerator buffers, so
+        suspending only trims the audit scratch (route/throttle logs).
+        Enforcement state (buckets, billed ground truth) is untouched."""
+        with self._lock:
+            self.route_log.clear()
+            self.throttle_log.clear()
+        return 0
 
     # --- reporting ---------------------------------------------------------
     def ledger_table(self) -> List[Tuple[int, str, Tuple[str, ...], int, int]]:
@@ -363,6 +492,7 @@ class CoreEngine:
             self.deferred.clear()
             self.admitted.clear()
             self.admit_wait_s.clear()
+            self.billed.clear()
             self.route_log.clear()
             self.throttle_log.clear()
 

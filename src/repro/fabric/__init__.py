@@ -1,0 +1,19 @@
+"""The stack-module fabric: one tenant-lifecycle protocol for every plane.
+
+NetKernel's core claim is that the network stack is a *module* behind a
+uniform, swappable interface. This package is that interface for tenant
+lifecycle: any engine — the serving plane's ``ServeEngine``/scheduler, the
+bytes plane's ``CoreEngine``, a jit-free test double — implements
+``StackModule``, and the cluster/placement layers move, fold, conserve,
+suspend and resume tenants through it without ever naming a concrete
+engine class.
+"""
+from repro.fabric.module import (
+    ConservationLedger, SchedulerServeModule, StackModule, StackPlane,
+    TenantLoad, TenantState,
+)
+
+__all__ = [
+    "ConservationLedger", "SchedulerServeModule", "StackModule",
+    "StackPlane", "TenantLoad", "TenantState",
+]

@@ -7,7 +7,8 @@ from repro.serve.multiplex import (
 )
 from repro.serve.replay import (
     CLUSTER_SCENARIOS, SCENARIOS, ReplayReport, TenantReport, TraceReplayer,
-    make_replay_cluster, make_replay_engine, replay_scenario, scenario_spec,
+    make_replay_cluster, make_replay_engine, operator_rebalance,
+    replay_scenario, scenario_spec,
 )
 from repro.serve.scheduler import Request, TenantScheduler
 
@@ -19,5 +20,6 @@ __all__ = [
     "paper_table2_analog", "ramp_trace", "steady_trace",
     "CLUSTER_SCENARIOS", "SCENARIOS", "ReplayReport", "TenantReport",
     "TraceReplayer", "make_replay_cluster", "make_replay_engine",
-    "replay_scenario", "scenario_spec", "Request", "TenantScheduler",
+    "operator_rebalance", "replay_scenario", "scenario_spec", "Request",
+    "TenantScheduler",
 ]

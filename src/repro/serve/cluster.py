@@ -1,9 +1,10 @@
-"""EngineCluster: one controller, N ServeEngines, live tenant migration.
+"""EngineCluster: one controller, N stack modules per plane, live migration.
 
 The paper's operator owns the stack as *infrastructure*: many guests
 multiplex onto shared stack modules, and the operator can rebalance that
 mapping at will — including moving a tenant between modules without the
-guest noticing. This module is that placement power for the serving plane:
+guest noticing. This module is that placement power, written against the
+``StackModule`` protocol (repro.fabric) rather than any concrete engine:
 
   * N live ``ServeEngine``s (think: NSMs on different hosts) behind ONE
     shared ``RateController``. The controller's water-fill runs over the
@@ -13,58 +14,54 @@ guest noticing. This module is that placement power for the serving plane:
   * a tenant -> engine ``placement`` map the operator controls. New
     tenants auto-place on the least-loaded engine; ``migrate`` moves a
     live tenant mid-replay.
+  * optional extra planes: ``core_engines`` pairs each ServeEngine with a
+    bytes-plane ``CoreEngine``; one migration then moves the tenant's
+    serve *and* collective state through the same protocol calls.
 
-Migration is drain-and-transfer, and conserves the served-token ledger:
+Migration is drain-and-transfer, and conserves every plane's ledger:
 
-  1. the tenant's unserved queue, WFQ weight and token-bucket *level*
-     are exported from the source scheduler and imported at the
-     destination (a move can never reopen a fresh burst);
-  2. the source's cumulative ledger entries fold into the cluster-level
-     ``carried`` ledger, so the global view never jumps (telemetry on the
-     source sees a counter reset, not a negative rate);
+  1. each plane's module exports the tenant (``StackModule.export_tenant``:
+     unserved queue, WFQ weight, token-bucket *level* on the serve plane;
+     bucket level + flattened counters on the bytes plane) and the
+     destination module imports it (a move can never reopen a fresh burst);
+  2. the source's cumulative counters fold into the plane's
+     ``ConservationLedger`` carried view, so the global view never jumps
+     (telemetry on the source sees a counter reset, not a negative rate);
   3. in-flight slots are NOT moved: they finish — and bill — where they
      were admitted; the tenant is ``draining`` until they run dry, then
      the residual billing folds and the migration finalizes.
 
-``tenant_served_tokens`` (carried + live counters) therefore equals the
-request-level ground truth — sum of prompt+generated tokens over the
-tenant's completed and in-flight requests — at every instant, including
-across the migration window. ``assert_ledger_conservation`` checks exactly
-that (no lost tokens, no double-billing) and is invoked on every move.
+Each plane's ``ConservationLedger`` pins carried + live counters against
+the modules' summed billed ground truth — ONE assert implementation for
+both planes, invoked on every move (no lost tokens or bytes, no
+double-billing).
 
 Two closed-loop extensions sit on top of the migration primitive:
 
-  * **park/unpark lifecycle** — a quiesced engine can be parked (it stops
-    stepping: the cluster "saves cores", the paper's multiplexing claim)
-    and unparked when load returns. ``parked_engine_steps`` accumulates
-    the savings; at least one engine always stays awake.
+  * **park/unpark lifecycle** — a quiesced engine can be parked: it stops
+    stepping (the cluster "saves cores", the paper's multiplexing claim)
+    AND its modules ``suspend()`` — the KV-cache, slot table and scratch
+    are dropped, so parking saves *memory* too. ``unpark`` resumes the
+    modules (cache re-init is lazy: it re-materializes on the first
+    admission). ``parked_engine_steps`` and ``mem_saved_byte_steps``
+    accumulate the savings; at least one engine always stays awake.
   * **autopilot** — an attached ``PlacementController``
     (repro.control.placement) is ticked every ``place_every`` steps,
     exactly how the shared RateController is ticked, and applies its
     plans through ``apply_plan`` -> ``migrate``: the placement loop runs
     closed, next to the rate loop.
-
-When ``core_engines`` pairs each ServeEngine with a bytes-plane
-``CoreEngine``, one migration moves the tenant's serve *and* collective
-traffic: the core bucket level transfers, the core ledger folds into a
-cluster-level carried view, and byte conservation is asserted the same
-way token conservation is.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set
 
 from repro.control.telemetry import format_prometheus
+from repro.fabric import StackPlane, TenantState
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request
-
-_LEDGER_FIELDS = ("served_tokens", "admitted_requests", "deferred_polls",
-                  "admit_wait_sum")
-# bytes-plane carried-ledger fields (CoreEngine.export_tenant output)
-_CORE_FIELDS = ("ops", "bytes", "deferred_ops", "deferred_bytes",
-                "admitted_ops", "admitted_bytes", "admit_wait_s")
 
 
 @dataclass
@@ -150,17 +147,21 @@ class ClusterLedger:
 
 
 class EngineCluster:
-    """N ServeEngines + one shared RateController + operator placement.
+    """N serve-plane StackModules + one shared RateController + placement.
 
     Exposes the same driving surface as a single ``ServeEngine`` (``B``,
     ``submit``, ``step``, ``completed``, ``decode_steps``, ``scheduler``,
-    ``controller``) so ``TraceReplayer`` runs a cluster unchanged.
+    ``controller``) so ``TraceReplayer`` runs a cluster unchanged. All
+    tenant movement, ledger folding, conservation checks and the park
+    suspend/resume lifecycle go through the ``StackModule`` protocol —
+    the cluster never names a concrete engine class.
 
     Args:
-        engines: live ServeEngines. Their own ``controller`` hooks must be
-            unset — the cluster drives the shared controller itself (one
-            tick for the whole cluster per control interval, not one per
-            engine).
+        engines: live serve-plane modules (``ServeEngine`` or any
+            ``SchedulerServeModule``). Their own ``controller`` hooks must
+            be unset — the cluster drives the shared controller itself
+            (one tick for the whole cluster per control interval, not one
+            per engine).
         controller: the shared ``RateController`` (capacity in tokens/s =
             the ONE bottleneck spanning all engines). Any engine scheduler
             not yet attached to it is attached here.
@@ -197,6 +198,12 @@ class EngineCluster:
             raise ValueError(
                 f"core_engines must pair 1:1 with engines "
                 f"({len(self.core_engines)} vs {len(self.engines)})")
+        # every plane is modules + ONE shared ConservationLedger — the
+        # serve plane always, the bytes plane when attached
+        self.planes: List[StackPlane] = [
+            StackPlane.build("serve", self.engines)]
+        if self.core_engines is not None:
+            self.planes.append(StackPlane.build("bytes", self.core_engines))
         self.autopilot = None
         self.place_every = max(int(place_every), 1)
         self.placement: Dict[int, int] = {}
@@ -204,17 +211,25 @@ class EngineCluster:
         self.parked: Set[int] = set()               # engine indices asleep
         self.parked_engine_steps = 0                # the cores-saved ledger
         self.max_parked = 0                         # peak engines asleep
+        # the memory-saved ledger: bytes currently freed per parked engine,
+        # cumulative bytes ever freed, the per-step integral of freed
+        # bytes, and the peak resident droppable-buffer footprint
+        self._suspended_bytes: Dict[int, int] = {}
+        self.bytes_freed_total = 0
+        self.mem_saved_byte_steps = 0
+        self.peak_resident_bytes = 0
         self.migration_log: List[MigrationRecord] = []
         self.migrations_started = 0
         self.migrations_completed = 0
         self.completed: List[Request] = []
         self._seen_completed = [len(e.completed) for e in self.engines]
         self.steps = 0
-        self._carried: Dict[str, Dict[int, float]] = \
-            {f: {} for f in _LEDGER_FIELDS}
-        self._carried_core: Dict[str, Dict[int, float]] = \
-            {f: {} for f in _CORE_FIELDS}
         self.scheduler = ClusterLedger(self)
+        self._note_resident()
+
+    @property
+    def serve_plane(self) -> StackPlane:
+        return self.planes[0]
 
     def attach_autopilot(self, autopilot,
                          place_every: Optional[int] = None):
@@ -252,8 +267,9 @@ class EngineCluster:
         ``control_every`` steps), step every awake engine once, collect
         completions, finalize any drained migrations, tick the autopilot
         (every ``place_every`` steps). Parked engines do not step — that
-        skipped work *is* the cores-saved claim, accumulated in
-        ``parked_engine_steps``. Returns the number of active slots
+        skipped work *is* the cores-saved claim (``parked_engine_steps``)
+        and their suspended buffers *are* the memory-saved claim
+        (``mem_saved_byte_steps``). Returns the number of active slots
         cluster-wide."""
         self.steps += 1
         if self.controller is not None and \
@@ -268,7 +284,9 @@ class EngineCluster:
         # — an engine the autopilot parks below still ran this step and
         # must not be billed as a saved core until the next one
         self.parked_engine_steps += len(self.parked)
+        self.mem_saved_byte_steps += sum(self._suspended_bytes.values())
         self.max_parked = max(self.max_parked, len(self.parked))
+        self._note_resident()
         self._collect_completed()
         self._poll_drains()
         if self.autopilot is not None and \
@@ -317,9 +335,9 @@ class EngineCluster:
         return min(self.active_engines(), key=load)
 
     def engine_load(self, k: int) -> float:
-        """Demand pressure on engine ``k``: queued + in-flight requests."""
-        e = self.engines[k]
-        return float(e.scheduler.pending() + e.inflight())
+        """Demand pressure on engine ``k``: queued + in-flight requests
+        (the serve module's ``StackModule.load``)."""
+        return self.engines[k].load()
 
     def hottest_engine(self) -> int:
         return max(self.active_engines(),
@@ -329,7 +347,7 @@ class EngineCluster:
         return min(self.active_engines(),
                    key=lambda k: (self.engine_load(k), k))
 
-    # -- park/unpark lifecycle (the cores-saved claim) ----------------------
+    # -- park/unpark lifecycle (cores- AND memory-saved claims) -------------
     def parkable(self, k: int) -> bool:
         """True iff engine ``k`` could be parked right now: awake, fully
         quiesced (no placed tenants, no draining source, no queued or
@@ -342,13 +360,14 @@ class EngineCluster:
             return False
         if any(src == k for src in self.draining.values()):
             return False
-        e = self.engines[k]
-        return e.scheduler.pending() == 0 and e.inflight() == 0
+        return self.engines[k].load() == 0
 
     def park(self, k: int) -> None:
         """Put a quiesced engine to sleep: it stops stepping (saved cores)
-        until ``unpark``. Raises if the engine still has any work — parking
-        must never strand a tenant."""
+        AND every plane's module at ``k`` suspends — KV-cache, slot table
+        and scratch are dropped (saved memory) — until ``unpark``. Raises
+        if the engine still has any work: parking must never strand a
+        tenant."""
         if not 0 <= k < len(self.engines):
             raise IndexError(f"engine {k} not in cluster")
         if k in self.parked:
@@ -359,15 +378,22 @@ class EngineCluster:
                 f"in-flight, a drain in progress, or it is the last "
                 f"awake engine); refuse to park")
         self.parked.add(k)
+        freed = sum(plane.modules[k].suspend() for plane in self.planes)
+        self._suspended_bytes[k] = freed
+        self.bytes_freed_total += freed
 
     def unpark(self, k: int) -> None:
-        """Wake a parked engine; it resumes stepping and can host tenants
-        again immediately."""
+        """Wake a parked engine: every plane's module ``resume``s (the
+        KV-cache re-materializes lazily on the first admission) and it
+        can step and host tenants again immediately."""
         if not 0 <= k < len(self.engines):
             raise IndexError(f"engine {k} not in cluster")
         if k not in self.parked:
             raise ValueError(f"engine {k} is not parked")
         self.parked.discard(k)
+        for plane in self.planes:
+            plane.modules[k].resume()
+        self._suspended_bytes.pop(k, None)
 
     def cores_saved(self) -> float:
         """Average engines parked per cluster step so far — the closed-loop
@@ -375,19 +401,41 @@ class EngineCluster:
         one whole engine slept through the run)."""
         return self.parked_engine_steps / max(self.steps, 1)
 
+    def parked_bytes(self) -> int:
+        """Bytes currently freed by suspended (parked) engines."""
+        return sum(self._suspended_bytes.values())
+
+    def mem_saved(self) -> float:
+        """Average bytes freed per cluster step so far — the memory analog
+        of ``cores_saved`` (bytes; the integral of parked buffer bytes
+        over steps, normalized)."""
+        return self.mem_saved_byte_steps / max(self.steps, 1)
+
+    def resident_bytes(self) -> int:
+        """Droppable buffer bytes currently resident across every plane's
+        modules (suspended modules report 0)."""
+        return sum(m.resident_bytes()
+                   for plane in self.planes for m in plane.modules)
+
+    def _note_resident(self) -> None:
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes())
+
     # -- migration ----------------------------------------------------------
     def migrate(self, tenant: int, dst_engine: int,
                 *, now: Optional[float] = None) -> Optional[MigrationRecord]:
         """Move a live tenant to ``dst_engine`` mid-run, conserving its
-        ledger.
+        ledger on every plane.
 
-        Transfers the unserved queue, WFQ weight and token-bucket level to
-        the destination immediately; folds the source's cumulative counters
-        into the cluster ledger; leaves in-flight slots draining on the
-        source (they finish and bill there). Delta-push history for the
-        tenant is invalidated so the controller re-pushes fresh rates to
-        every enforcement point next tick. Returns the ``MigrationRecord``
-        (None if the tenant is already on ``dst_engine``).
+        For each plane: the source module exports the tenant (queue, WFQ
+        weight, token-bucket level), the carried counters fold into the
+        plane's ``ConservationLedger``, and the destination imports —
+        identical protocol calls whether the plane is serve or bytes.
+        In-flight slots stay draining on the source (they finish and bill
+        there). Delta-push history for the tenant is invalidated so the
+        controller re-pushes fresh rates to every enforcement point next
+        tick. Returns the ``MigrationRecord`` (None if the tenant is
+        already on ``dst_engine``).
         """
         if tenant not in self.placement:
             raise KeyError(f"tenant {tenant} is not placed on this cluster")
@@ -404,56 +452,42 @@ class EngineCluster:
         if dst in self.parked:
             raise ValueError(f"engine {dst} is parked; unpark it before "
                              f"migrating tenant {tenant} onto it")
-        src_eng, dst_eng = self.engines[src], self.engines[dst]
-        # validate the destination BEFORE the destructive export: failing
-        # after export_tenant would lose the unserved queue it returned
-        if tenant in dst_eng.scheduler.queues:
-            raise ValueError(
-                f"tenant {tenant} is already active on engine {dst} "
-                f"(out-of-band submission?); migration requires a "
-                f"quiesced destination")
-        if self.core_engines is not None and \
-                tenant in self.core_engines[dst].buckets:
-            # same discipline for the bytes plane: its import would refuse
-            # a non-quiesced destination, but only AFTER the serve state
-            # and the core ledger had been destructively exported
-            raise ValueError(
-                f"tenant {tenant} already has a bytes-plane bucket on "
-                f"engine {dst} (out-of-band set_tenant_rate?); migration "
-                f"requires a quiesced destination on both planes")
-        total_before = self.tenant_served_tokens(tenant)
-        inflight = src_eng.inflight(tenant)
-        state = src_eng.scheduler.export_tenant(tenant, now)
-        self._fold(tenant, state)
-        dst_eng.scheduler.import_tenant(tenant, state, now)
-        if self.core_engines is not None:
-            # one plan moves both planes: the tenant's collective-traffic
-            # state follows its serve state, byte-conserving
-            core_before = self.tenant_core_bytes(tenant)
-            cstate = self.core_engines[src].export_tenant(tenant, now)
-            self._fold_core(tenant, cstate)
-            self.core_engines[dst].import_tenant(tenant, cstate, now)
-            core_after = self.tenant_core_bytes(tenant)
-            if int(round(core_after)) != int(round(core_before)):
-                raise AssertionError(
-                    f"bytes-plane migration broke tenant {tenant}'s "
-                    f"ledger continuity: {core_before} -> {core_after} "
-                    f"bytes")
+        # validate EVERY plane's destination BEFORE the first destructive
+        # export: failing after an export would lose the unserved queue
+        # (or strand carried counters half-folded)
+        for plane in self.planes:
+            if plane.modules[dst].has_tenant(tenant):
+                raise ValueError(
+                    f"tenant {tenant} has live {plane.name}-plane state "
+                    f"on engine {dst} (out-of-band submission or rate "
+                    f"push?); migration requires a quiesced destination "
+                    f"on every plane")
+        totals_before = {p.name: p.ledger.total(tenant) for p in self.planes}
+        inflight = self.engines[src].tenant_load(tenant).inflight
+        serve_state: Optional[TenantState] = None
+        for plane in self.planes:
+            state = plane.modules[src].export_tenant(tenant, now)
+            plane.ledger.fold(tenant, plane.modules[src], state)
+            plane.modules[dst].import_tenant(tenant, state, now)
+            if plane is self.serve_plane:
+                serve_state = state
         self.placement[tenant] = dst
         if self.controller is not None:
             self.controller.invalidate_tenant(tenant)
         rec = MigrationRecord(
             tenant=tenant, src=src, dst=dst, started_step=self.steps,
-            queued_moved=len(state["queue"]), inflight_at_move=inflight,
-            bucket_tokens_moved=(state["bucket"] or {}).get("tokens", 0.0))
+            queued_moved=len(serve_state.queue), inflight_at_move=inflight,
+            bucket_tokens_moved=serve_state.bucket_tokens)
         self.migrations_started += 1
         self.migration_log.append(rec)
-        # the move itself bills nothing: the global ledger must not jump
-        total_after = self.tenant_served_tokens(tenant)
-        if total_after != total_before:
-            raise AssertionError(
-                f"migration changed tenant {tenant}'s served-token ledger: "
-                f"{total_before} -> {total_after}")
+        # the move itself bills nothing: no plane's global ledger may jump
+        for plane in self.planes:
+            after = plane.ledger.total(tenant)
+            if int(round(after)) != int(round(totals_before[plane.name])):
+                raise AssertionError(
+                    f"{plane.name}-plane migration broke tenant {tenant}'s "
+                    f"ledger continuity: {totals_before[plane.name]} -> "
+                    f"{after} {plane.ledger.conserved}")
         self.assert_ledger_conservation(tenant)
         if inflight:
             self.draining[tenant] = src
@@ -471,11 +505,18 @@ class EngineCluster:
         .. deprecated:: since the placement autopilot landed this is a
            thin wrapper over ``PlacementController.plan_once`` (the
            ``spread_hot`` policy, forced: no bands, no cooldown, no drain
-           gate — the legacy semantics). Prefer attaching a
-           ``PlacementController`` via ``attach_autopilot`` so the loop
-           runs closed instead of one operator shot at a time.
+           gate — the legacy semantics). Calling it emits a
+           ``DeprecationWarning``; prefer attaching a
+           ``PlacementController`` via ``attach_autopilot`` (closed loop)
+           or calling ``PlacementController.plan_once(force=True)``
+           directly (one-shot).
         """
-        from repro.control.placement import PlacementController
+        from repro.serve.replay import operator_rebalance
+        warnings.warn(
+            "EngineCluster.rebalance() is deprecated; use "
+            "operator_rebalance / PlacementController.plan_once("
+            "force=True) for the one-shot or attach_autopilot() for the "
+            "closed loop", DeprecationWarning, stacklevel=2)
         if tenant is not None:
             # keep the legacy error contract migrate() provided
             if tenant not in self.placement:
@@ -485,13 +526,7 @@ class EngineCluster:
                 raise RuntimeError(
                     f"tenant {tenant} is still draining from a previous "
                     f"migration; wait for it to finalize")
-        pc = PlacementController(self, policy="spread_hot",
-                                 cooldown_s=0.0, drain_cost_factor=None)
-        before = len(self.migration_log)
-        pc.plan_once(now=now, pin_tenant=tenant, force=True)
-        if len(self.migration_log) == before:
-            return None
-        return self.migration_log[before]
+        return operator_rebalance(self, now=now, pin_tenant=tenant)
 
     def apply_plan(self, plan, *,
                    now: Optional[float] = None) -> List[MigrationRecord]:
@@ -523,46 +558,24 @@ class EngineCluster:
                 self.park(k)
         return records
 
-    def _fold(self, tenant: int, state: Dict) -> None:
-        for f in _LEDGER_FIELDS:
-            c = self._carried[f]
-            c[tenant] = c.get(tenant, 0) + state.get(f, 0)
-
-    def _fold_core(self, tenant: int, state: Dict) -> None:
-        """Fold one CoreEngine export into the bytes-plane carried ledger
-        (flattening the per-(verb, axes) detail to per-tenant totals —
-        the continuity invariant is about totals)."""
-        ops = sum(o for o, _ in state.get("ledger", {}).values())
-        nbytes = sum(b for _, b in state.get("ledger", {}).values())
-        d_ops = sum(o for o, _ in state.get("deferred", {}).values())
-        d_bytes = sum(b for _, b in state.get("deferred", {}).values())
-        a_ops, a_bytes = state.get("admitted", (0, 0))
-        inc = {"ops": ops, "bytes": nbytes,
-               "deferred_ops": d_ops, "deferred_bytes": d_bytes,
-               "admitted_ops": a_ops, "admitted_bytes": a_bytes,
-               "admit_wait_s": state.get("admit_wait_s", 0.0)}
-        for f in _CORE_FIELDS:
-            c = self._carried_core[f]
-            c[tenant] = c.get(tenant, 0) + inc[f]
-
     def _finalize(self, rec: MigrationRecord) -> None:
         rec.finalized_step = self.steps
         self.migrations_completed += 1
         self.assert_ledger_conservation(rec.tenant)
 
     def _poll_drains(self) -> None:
+        serve = self.serve_plane
         for tenant, src in list(self.draining.items()):
-            src_eng = self.engines[src]
-            if src_eng.inflight(tenant):
+            if serve.modules[src].tenant_load(tenant).inflight:
                 continue
             # in-flight work finished on the source: fold its residual
             # billing (decode tokens accrued since the move) and finalize
-            residual = src_eng.scheduler.export_tenant(tenant)
-            if residual["queue"]:
+            residual = serve.modules[src].export_tenant(tenant)
+            if residual.queue:
                 raise AssertionError(
                     f"tenant {tenant} grew a queue on drained source "
                     f"engine {src}: routing leaked past the placement map")
-            self._fold(tenant, residual)
+            serve.ledger.fold(tenant, serve.modules[src], residual)
             del self.draining[tenant]
             rec = next(r for r in reversed(self.migration_log)
                        if r.tenant == tenant)
@@ -577,53 +590,40 @@ class EngineCluster:
     # -- cluster-global ledger ----------------------------------------------
     def merged_ledger(self, fld: str) -> Dict[int, float]:
         """Carried (migrated-away) history + live per-engine counters for
-        one ledger field — the continuous cluster-global view."""
-        if fld not in _LEDGER_FIELDS:
-            raise KeyError(f"unknown ledger field {fld!r}")
-        out = dict(self._carried[fld])
-        for e in self.engines:
-            for t, v in getattr(e.scheduler, fld).items():
-                out[t] = out.get(t, 0) + v
-        return out
+        one serve-plane ledger field — the continuous cluster-global
+        view."""
+        return self.serve_plane.ledger.merged(fld)
 
     def tenant_served_tokens(self, tenant: int) -> float:
         """Tokens billed to a tenant cluster-wide, continuous across
         migrations (carried + live engine counters)."""
-        return self._carried["served_tokens"].get(tenant, 0) + sum(
-            e.scheduler.served_tokens.get(tenant, 0) for e in self.engines)
+        return self.serve_plane.ledger.total(tenant, "served_tokens")
 
     def tenant_core_bytes(self, tenant: int) -> float:
         """Collective bytes routed for a tenant cluster-wide, continuous
         across migrations (bytes-plane carried + live CoreEngine ledgers).
         0.0 when the cluster has no bytes plane attached."""
-        if self.core_engines is None:
-            return 0.0
-        return self._carried_core["bytes"].get(tenant, 0) + sum(
-            ce.total_bytes(tenant) for ce in self.core_engines)
+        for plane in self.planes:
+            if plane.name == "bytes":
+                return plane.ledger.total(tenant, "bytes")
+        return 0.0
 
     def tenant_billed_ground_truth(self, tenant: int) -> int:
         """Request-level ground truth: prompt+generated tokens over the
-        tenant's completed and in-flight requests. The billing scheme
-        (admit bills prompt + first prefill token, each decode step bills
-        the token it produced) makes this equal the ledger at all times."""
-        self._collect_completed()
-        total = sum(len(r.prompt) + len(r.generated)
-                    for r in self.completed if r.tenant_id == tenant)
-        for e in self.engines:
-            for s in e.slots:
-                if s.active and s.req.tenant_id == tenant:
-                    total += len(s.req.prompt) + len(s.req.generated)
-        return total
+        tenant's completed and in-flight requests, summed over every
+        serve module (completed records never migrate). The billing
+        scheme (admit bills prompt + first prefill token, each decode
+        step bills the token it produced) makes this equal the ledger at
+        all times."""
+        return int(round(self.serve_plane.ledger.ground_truth(tenant)))
 
     def assert_ledger_conservation(self, tenant: int) -> None:
-        """No lost tokens, no double-billing: the cluster ledger must equal
-        the request-level ground truth exactly."""
-        ledger = self.tenant_served_tokens(tenant)
-        truth = self.tenant_billed_ground_truth(tenant)
-        if int(round(ledger)) != truth:
-            raise AssertionError(
-                f"tenant {tenant} ledger broke conservation: ledger says "
-                f"{ledger} tokens, requests account for {truth}")
+        """No lost units, no double-billing, on ANY plane: each plane's
+        carried+live ledger must equal its modules' summed billed ground
+        truth exactly — one shared assert implementation
+        (``ConservationLedger.assert_conservation``)."""
+        for plane in self.planes:
+            plane.ledger.assert_conservation(tenant, plane=plane.name)
 
     # -- reporting ----------------------------------------------------------
     def counters(self) -> Dict[str, float]:
@@ -640,6 +640,12 @@ class EngineCluster:
             "nk_parked_engine_steps_total":
                 float(self.parked_engine_steps),
             "nk_cores_saved": self.cores_saved(),
+            "nk_parked_bytes": float(self.parked_bytes()),
+            "nk_bytes_freed_total": float(self.bytes_freed_total),
+            "nk_mem_saved_bytes": self.mem_saved(),
+            "nk_resident_cache_bytes": float(self.resident_bytes()),
+            "nk_peak_resident_cache_bytes":
+                float(self.peak_resident_bytes),
         }
         for t, k in sorted(self.placement.items()):
             out[f'nk_placement{{tenant="{t}"}}'] = float(k)

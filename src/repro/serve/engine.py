@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.distribution.sharding import ShardingCtx, init_params
+from repro.fabric import SchedulerServeModule
 from repro.models.model import (
     cache_schema, forward_decode, forward_prefill, model_schema,
 )
@@ -34,8 +35,17 @@ class Slot:
     remaining: int = 0
 
 
-class ServeEngine:
-    """Slot-based continuous batching engine (greedy decoding)."""
+class ServeEngine(SchedulerServeModule):
+    """Slot-based continuous batching engine (greedy decoding).
+
+    Implements the serve-plane ``StackModule`` protocol (repro.fabric)
+    via ``SchedulerServeModule``: tenant export/import delegate to the
+    scheduler, ``billed_ground_truth`` reads completed requests + live
+    slots, and ``suspend``/``resume`` make parking a real memory saving —
+    suspend drops the KV-cache, slot table and step scratch; resume
+    re-materializes the cache lazily from the shared ``cache_schema`` on
+    the first admission after unpark.
+    """
 
     def __init__(self, cfg: ModelConfig, rcfg: RunConfig, mesh, params=None,
                  *, batch_slots: int = 8, max_seq: int = 256,
@@ -59,9 +69,10 @@ class ServeEngine:
         self.control_every = max(int(control_every), 1)
         self.params = params if params is not None else init_params(
             model_schema(cfg, mesh), key or jax.random.PRNGKey(0))
-        self.slots = [Slot() for _ in range(batch_slots)]
-        self.caches = init_params(
-            cache_schema(cfg, batch_slots, max_seq), jax.random.PRNGKey(1))
+        self.slots = self._make_slots()
+        self.caches = None
+        self._cache_nbytes = 0
+        self._init_caches()
         self.steps = 0
         self.decode_steps = 0
         self.completed: List[Request] = []
@@ -82,21 +93,34 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
 
+    # -- StackModule buffer hooks (the suspend/resume memory story) --------
+    def _make_slots(self):
+        return [Slot() for _ in range(self.B)]
+
+    def _init_caches(self) -> None:
+        """(Re-)materialize the KV-cache from the shared ``cache_schema``
+        — at construction, and lazily on the first admission after a
+        ``resume`` (an unparked engine with no traffic stays cache-free).
+        Slot caches are fully overwritten by prefill on admission, so a
+        re-init is bit-identical to never having suspended."""
+        self.caches = init_params(
+            cache_schema(self.cfg, self.B, self.max_seq),
+            jax.random.PRNGKey(1))
+        self._cache_nbytes = sum(
+            int(x.size) * x.dtype.itemsize
+            for x in jax.tree.leaves(self.caches))
+
+    def _cache_bytes(self) -> int:
+        return 0 if self.caches is None else self._cache_nbytes
+
+    def _release_buffers(self) -> None:
+        self.caches = None
+        self.step_times = []
+
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         """Queue one request for admission (delegates to the scheduler)."""
         self.scheduler.submit(req)
-
-    def inflight(self, tenant_id: Optional[int] = None) -> int:
-        """Active decode slots held by one tenant (or all, if None).
-
-        The drain signal for live migration: a tenant has left this engine
-        once its queue was exported *and* its in-flight slots ran dry —
-        in-flight requests finish (and bill) where they were admitted, so
-        no token is ever lost or moved mid-generation.
-        """
-        return sum(1 for s in self.slots if s.active and
-                   (tenant_id is None or s.req.tenant_id == tenant_id))
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -112,6 +136,10 @@ class ServeEngine:
             req = self.scheduler.next_request(now)
             if req is None:
                 return
+            if self.caches is None:
+                # lazy resume: the KV-cache dropped at park re-materializes
+                # only when a request actually lands here
+                self._init_caches()
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             last_logits, caches1 = self._prefill(self.params, prompt)
             # install the single-sequence cache into slot i
@@ -140,6 +168,9 @@ class ServeEngine:
 
     def step(self, now=None) -> int:
         """Admit + one decode step for all active slots. Returns #active."""
+        if self.suspended:
+            raise RuntimeError(
+                "engine is suspended (parked); resume() before stepping")
         t0 = time.monotonic()
         self.steps += 1
         # tick before admission (and before the no-work early return): a

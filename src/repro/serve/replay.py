@@ -68,7 +68,15 @@ class ReplayReport:
     placement loop when an autopilot drove the cluster: average engines
     parked per step inside this window (the closed-loop core savings),
     the peak engines asleep at once, and how many moves the autopilot
-    applied."""
+    applied.
+
+    ``mem_saved_bytes``/``max_parked_bytes``/``peak_resident_cache_bytes``
+    surface the park suspend/resume lifecycle, all windowed to this run:
+    average bytes freed per cluster step (the memory analog of
+    ``cores_saved``), the peak bytes simultaneously freed by suspended
+    engines, and the peak resident droppable-buffer footprint
+    (KV-caches + slot state across awake engines) observed inside the
+    window."""
 
     duration_s: float
     capacity: float               # enforced bottleneck, tokens/s
@@ -82,6 +90,9 @@ class ReplayReport:
     cores_saved: float = 0.0      # avg engines parked per cluster step
     max_parked: int = 0           # peak engines asleep at once
     autopilot_moves: int = 0      # placement-loop migrations this window
+    mem_saved_bytes: float = 0.0  # avg bytes freed per cluster step
+    max_parked_bytes: int = 0     # peak bytes freed by suspended engines
+    peak_resident_cache_bytes: int = 0   # lifetime peak resident buffers
 
     def rates(self) -> Dict[int, float]:
         return {t: r.achieved_rate for t, r in self.per_tenant.items()}
@@ -211,6 +222,7 @@ class TraceReplayer:
         migrations0 = getattr(self.engine, "migrations_completed", 0)
         cl_steps0 = getattr(self.engine, "steps", 0)
         parked0 = getattr(self.engine, "parked_engine_steps", 0)
+        mem0 = getattr(self.engine, "mem_saved_byte_steps", 0)
         pilot = getattr(self.engine, "autopilot", None)
         pilot_moves0 = getattr(pilot, "moves_applied", 0)
 
@@ -223,9 +235,13 @@ class TraceReplayer:
                                  f"{T}-interval trace")
             ev.setdefault(int(idx), []).append(fn)
         frac = np.zeros(n)
-        # per-window peak of engines asleep (the cluster's own max_parked
-        # is a lifetime high-water mark; this report is windowed)
+        # per-window peaks of engines asleep / bytes freed (the cluster's
+        # own high-water marks are lifetime; this report is windowed)
         max_parked = 0
+        max_parked_bytes = 0
+        peak_resident = 0
+        parked_bytes = getattr(self.engine, "parked_bytes", None)
+        resident_bytes = getattr(self.engine, "resident_bytes", None)
         for t in range(T):
             for fn in ev.get(t, ()):
                 fn(self.engine, self._vt)
@@ -241,6 +257,11 @@ class TraceReplayer:
                 self._vt += self.step_dt
                 max_parked = max(max_parked,
                                  len(getattr(self.engine, "parked", ())))
+                if parked_bytes is not None:
+                    max_parked_bytes = max(max_parked_bytes,
+                                           parked_bytes())
+                if resident_bytes is not None:
+                    peak_resident = max(peak_resident, resident_bytes())
 
         duration = self._vt - start_vt
         completed: Dict[int, int] = {}
@@ -267,6 +288,7 @@ class TraceReplayer:
         cl_steps = getattr(self.engine, "steps", 0) - cl_steps0
         parked_steps = getattr(self.engine, "parked_engine_steps", 0) \
             - parked0
+        mem_steps = getattr(self.engine, "mem_saved_byte_steps", 0) - mem0
         return ReplayReport(
             duration_s=duration, capacity=self.capacity,
             per_tenant=per_tenant,
@@ -281,6 +303,9 @@ class TraceReplayer:
             max_parked=max_parked,
             autopilot_moves=getattr(pilot, "moves_applied", 0)
             - pilot_moves0,
+            mem_saved_bytes=mem_steps / cl_steps if cl_steps else 0.0,
+            max_parked_bytes=max_parked_bytes,
+            peak_resident_cache_bytes=peak_resident,
         )
 
 
@@ -387,7 +412,8 @@ SCENARIOS = ("steady", "adversarial", "migration", "correlated", "ramp",
 
 # scenarios that need an EngineCluster (engines >= 2) to mean anything,
 # with the autopilot policy each one runs by default (None = operator-
-# driven: the migration scenario fires rebalance() from an event instead)
+# driven: the migration scenario fires a one-shot operator_rebalance
+# event — plan_once(force=True) — instead)
 CLUSTER_SCENARIOS = {"migration": None, "consolidation": "consolidate",
                      "hotspot": "spread_hot"}
 
@@ -447,6 +473,26 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
     return trace, cap
 
 
+def operator_rebalance(cluster, now=None, *, pin_tenant=None):
+    """One operator-triggered hot->cool rebalance, as a replay event.
+
+    The modern spelling of the deprecated ``EngineCluster.rebalance()``
+    (which delegates here, so the legacy semantics exist once): a
+    one-shot ``PlacementController.plan_once(force=True)`` over the
+    ``spread_hot`` policy (no bands, no cooldown, no drain gate).
+    ``pin_tenant`` overrides victim selection. Returns the
+    ``MigrationRecord`` of the move that landed, or None if the cluster
+    was already balanced."""
+    from repro.control.placement import PlacementController
+    pc = PlacementController(cluster, policy="spread_hot",
+                             cooldown_s=0.0, drain_cost_factor=None)
+    before = len(cluster.migration_log)
+    pc.plan_once(now=now, pin_tenant=pin_tenant, force=True)
+    if len(cluster.migration_log) == before:
+        return None
+    return cluster.migration_log[before]
+
+
 # row index of the misbehaver in the adversarial trace (multiplex's default)
 ADVERSARIAL_HOG = -1
 
@@ -479,7 +525,7 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     # fail fast, before any engine construction (jit compiles are minutes)
     needs_cluster = name in CLUSTER_SCENARIOS
     if needs_cluster and (engines < 2 if engine is None
-                          else not hasattr(engine, "rebalance")):
+                          else not hasattr(engine, "migrate")):
         raise ValueError(f"the {name} scenario needs a cluster: "
                          f"pass engines >= 2 (or an EngineCluster)")
     if autopilot is None:
@@ -507,7 +553,6 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
         eng.attach_autopilot(autopilot)
     events = None
     if name == "migration":
-        events = [(max(intervals // 2, 1),
-                   lambda e, now: e.rebalance(now=now))]
+        events = [(max(intervals // 2, 1), operator_rebalance)]
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
     return rep.run(trace, events=events)

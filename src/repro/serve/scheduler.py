@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 from repro.core.engine import TokenBucket
+from repro.fabric import TenantState
 
 
 @dataclass
@@ -134,33 +135,40 @@ class TenantScheduler:
 
     # -- migration ----------------------------------------------------------
     def export_tenant(self, tenant_id: int,
-                      now: Optional[float] = None) -> Dict:
+                      now: Optional[float] = None) -> TenantState:
         """Atomically remove a tenant and return its transferable state.
 
-        The source half of live migration. Returns a dict with the tenant's
-        unserved ``queue`` (list of Requests, FIFO order), ``weight``,
-        ``bucket`` (a ``TokenBucket.snapshot`` settled at ``now``, or None
-        if uncapped) and its cumulative ledger entries (``served_tokens``
-        [tokens], ``admitted_requests``, ``deferred_polls``,
-        ``admit_wait_sum`` [s]). The ledger entries are for the *operator*
-        to carry — ``import_tenant`` deliberately does not replay them into
-        the destination, where a sudden counter jump would read as a rate
-        spike to telemetry.
+        The source half of live migration — the serve plane's
+        ``StackModule.export_tenant`` body. Returns a ``TenantState``
+        whose payload carries the tenant's unserved ``queue`` (list of
+        Requests, FIFO order) and WFQ ``weight``, whose ``bucket`` is a
+        ``TokenBucket.snapshot`` settled at ``now`` (None if uncapped),
+        and whose ``carried`` counters are the cumulative ledger entries
+        (``served_tokens`` [tokens], ``admitted_requests``,
+        ``deferred_polls``, ``admit_wait_sum`` [s]). The carried entries
+        are for the *operator* to fold — ``import_tenant`` deliberately
+        does not replay them into the destination, where a sudden counter
+        jump would read as a rate spike to telemetry.
         """
-        state = {
-            "queue": list(self.queues.get(tenant_id, ())),
-            "weight": self.weights.get(tenant_id, 1.0),
-            "bucket": (self.buckets[tenant_id].snapshot(now)
-                       if tenant_id in self.buckets else None),
-            "served_tokens": self.served_tokens.get(tenant_id, 0),
-            "admitted_requests": self.admitted_requests.get(tenant_id, 0),
-            "deferred_polls": self.deferred_polls.get(tenant_id, 0),
-            "admit_wait_sum": self.admit_wait_sum.get(tenant_id, 0.0),
-        }
+        state = TenantState(
+            plane="serve",
+            bucket=(self.buckets[tenant_id].snapshot(now)
+                    if tenant_id in self.buckets else None),
+            carried={
+                "served_tokens": self.served_tokens.get(tenant_id, 0),
+                "admitted_requests":
+                    self.admitted_requests.get(tenant_id, 0),
+                "deferred_polls": self.deferred_polls.get(tenant_id, 0),
+                "admit_wait_sum": self.admit_wait_sum.get(tenant_id, 0.0),
+            },
+            payload={
+                "queue": list(self.queues.get(tenant_id, ())),
+                "weight": self.weights.get(tenant_id, 1.0),
+            })
         self.drop_tenant(tenant_id)
         return state
 
-    def import_tenant(self, tenant_id: int, state: Dict,
+    def import_tenant(self, tenant_id: int, state: TenantState,
                       now: Optional[float] = None) -> None:
         """Install a migrated tenant from ``export_tenant`` state.
 
@@ -170,16 +178,24 @@ class TenantScheduler:
         destination's current minimum so the migrant competes fairly from
         now instead of replaying a zero-vtime catch-up burst.
         """
+        if state.plane != "serve":
+            # bucket snapshots are shape-identical across planes: without
+            # this guard a bytes-denominated level would silently install
+            # as a tokens/s bucket
+            raise ValueError(
+                f"cannot import a {state.plane!r}-plane TenantState into "
+                f"the serve plane")
         if tenant_id in self.queues:
             raise ValueError(f"tenant {tenant_id} is already active here; "
                              f"migration requires a quiesced destination")
-        self.add_tenant(tenant_id, weight=state.get("weight", 1.0))
-        self.queues[tenant_id].extend(state.get("queue", ()))
+        self.add_tenant(tenant_id,
+                        weight=state.payload.get("weight", 1.0))
+        self.queues[tenant_id].extend(state.payload.get("queue", ()))
         others = [v for t, v in self.vtime.items() if t != tenant_id]
         self.vtime[tenant_id] = min(others) if others else 0.0
-        if state.get("bucket") is not None:
+        if state.bucket is not None:
             self.buckets[tenant_id] = TokenBucket.restore(
-                state["bucket"], now)
+                state.bucket, now)
 
     def submit(self, req: Request):
         """Enqueue one request; an unknown tenant is auto-registered at

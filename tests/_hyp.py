@@ -57,8 +57,12 @@ except ImportError:
             return out
         return _Strategy(draw)
 
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
     st = SimpleNamespace(sampled_from=_sampled_from, integers=_integers,
-                         floats=_floats, booleans=_booleans, lists=_lists)
+                         floats=_floats, booleans=_booleans, lists=_lists,
+                         tuples=_tuples)
 
     def settings(**_kw):
         def deco(fn):

@@ -1,0 +1,121 @@
+"""Bytes-plane migration round-trip properties (hypothesis, shimmed).
+
+Mirrors ``tests/test_bucket_properties.py`` one layer up: where that file
+pins ``TokenBucket.snapshot/restore``, this one pins the whole
+``CoreEngine.export_tenant`` -> ``import_tenant`` transfer and the
+``ConservationLedger`` invariant the cluster asserts on every plan:
+
+  * an export/import round trip preserves the tenant's bucket level,
+    rate and capacity exactly (a migration can never mint a fresh burst
+    of bytes, nor lose burned-down level);
+  * carried + live counters are invariant under ARBITRARY sequences of
+    traffic and export/fold/import moves across a fleet of engines —
+    byte continuity is a property of the protocol, not of one lucky
+    interleaving;
+  * conservation (carried + live == summed billed ground truth) holds at
+    every step of every such sequence.
+
+Runs under real hypothesis when installed, the deterministic fallback of
+``tests/_hyp.py`` otherwise.
+"""
+import pytest
+
+from repro.core.engine import CoreEngine
+from repro.core.nqe import CommOp
+from repro.fabric import ConservationLedger
+
+from _hyp import given, settings, st
+
+_RATES = st.floats(min_value=0.1, max_value=1e4)
+_CAPS = st.floats(min_value=1.0, max_value=1e5)
+_TIMES = st.floats(min_value=0.0, max_value=100.0)
+_SIZES = st.integers(min_value=1, max_value=1 << 16)
+_OPS = st.lists(_SIZES, min_size=0, max_size=6)
+# one fleet event: (engine the tenant currently routes through is implied;
+# value picks the NEXT destination engine and the op burst between moves)
+_MOVES = st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                            _SIZES),
+                  min_size=1, max_size=8)
+
+
+def _pump(engine, tenant, sizes, now):
+    for sz in sizes:
+        op = CommOp(verb="psum", axes=("pod",), tenant_id=tenant,
+                    size_bytes=int(sz))
+        engine.admit(op, now)
+        engine.route(op)
+
+
+@settings(max_examples=40)
+@given(rate=_RATES, cap=_CAPS, ops=_OPS, t0=_TIMES)
+def test_export_import_preserves_bucket_level_and_rate(rate, cap, ops, t0):
+    """The enforcement state survives a migration bit-for-bit: rate,
+    capacity, and the burned-down token level all travel."""
+    src = CoreEngine(enforcement="account")
+    dst = CoreEngine(enforcement="account")
+    src.set_tenant_rate(1, rate, burst=cap)
+    _pump(src, 1, ops, t0)
+    level = src.buckets[1].snapshot(now=t0)["tokens"]
+    state = src.export_tenant(1, now=t0)
+    dst.import_tenant(1, state, now=t0)
+    b = dst.buckets[1]
+    assert b.rate == rate
+    assert b.capacity == cap
+    assert b.tokens == pytest.approx(level, rel=1e-9, abs=1e-9)
+    assert 0.0 <= b.tokens <= b.capacity + 1e-9
+    # and the source is fully quiesced (re-import back is legal)
+    assert not src.has_tenant(1)
+    src.import_tenant(1, dst.export_tenant(1, now=t0), now=t0)
+    assert src.buckets[1].tokens == pytest.approx(b.tokens)
+
+
+@settings(max_examples=40)
+@given(rate=_RATES, cap=_CAPS, moves=_MOVES, t0=_TIMES)
+def test_carried_plus_live_invariant_under_arbitrary_sequences(rate, cap,
+                                                               moves, t0):
+    """Byte continuity as a property: however traffic and migrations
+    interleave across a 3-engine fleet, carried + live counters equal the
+    total bytes ever routed, and conservation holds at every step."""
+    fleet = [CoreEngine(enforcement="account") for _ in range(3)]
+    led = ConservationLedger(fleet)
+    cur, pumped, now = 0, 0, t0
+    fleet[cur].set_tenant_rate(1, rate, burst=cap)
+    for dst, nbytes in moves:
+        _pump(fleet[cur], 1, [nbytes], now)
+        pumped += int(nbytes)
+        assert led.total(1) == pumped
+        led.assert_conservation(1)
+        if dst != cur:
+            state = fleet[cur].export_tenant(1, now=now)
+            led.fold(1, fleet[cur], state)
+            # mid-move: the live side forgot, the carried side remembers
+            assert led.total(1) == pumped
+            fleet[dst].import_tenant(1, state, now=now)
+            cur = dst
+            assert led.total(1) == pumped
+            led.assert_conservation(1)
+        now += 0.25
+    # ops are conserved too, not just bytes
+    assert led.merged("ops").get(1, 0) == len(moves)
+    assert led.ground_truth(1) == pumped
+
+
+@settings(max_examples=40)
+@given(rate=_RATES, cap=_CAPS, ops=_OPS, t0=_TIMES)
+def test_exported_counters_never_replay_into_the_destination(rate, cap,
+                                                             ops, t0):
+    """The carried counters are the operator's to fold — importing must
+    not replay them (a counter jump would read as a rate spike to
+    telemetry), so the destination's live ledger starts at zero."""
+    src = CoreEngine(enforcement="account")
+    dst = CoreEngine(enforcement="account")
+    src.set_tenant_rate(1, rate, burst=cap)
+    _pump(src, 1, ops, t0)
+    total = src.total_bytes(1)
+    state = src.export_tenant(1, now=t0)
+    assert state.carried["bytes"] == total
+    dst.import_tenant(1, state, now=t0)
+    assert dst.total_bytes(1) == 0
+    assert dst.billed_ground_truth(1) == 0
+    # the ground truth stayed on the source — migration-invariant
+    assert src.billed_ground_truth(1) == total

@@ -1,0 +1,302 @@
+"""StackModule protocol: one tenant lifecycle for both planes.
+
+Tier-1, jit-free. Pins the fabric layer (repro.fabric) the cluster and
+placement loop are now written against:
+
+  * ``TenantState`` is the uniform transfer unit both planes export;
+  * ``ConservationLedger`` is the ONE carried-ledger + conservation
+    assert implementation (serve tokens and collective bytes run through
+    the same code path);
+  * ``CoreEngine.import_tenant`` refuses a destination holding ANY live
+    bytes-plane state — not just a bucket (regression: an unbucketed
+    tenant with live ledger/deferred entries used to import silently and
+    corrupt byte continuity);
+  * park is a real suspend/resume: parking drops droppable buffers
+    (bytes freed ledger), unparking resumes, and serving state survives.
+"""
+import pytest
+
+from repro.core.engine import CoreEngine
+from repro.core.nqe import CommOp
+from repro.fabric import (
+    ConservationLedger, SchedulerServeModule, StackModule, TenantLoad,
+    TenantState,
+)
+
+from test_placement import FakeEngine, _req, make_fake_cluster
+
+
+def _op(tenant, nbytes=1000):
+    return CommOp(verb="psum", axes=("pod",), tenant_id=tenant,
+                  size_bytes=nbytes)
+
+
+def _pump_core(engine, tenant, nbytes, n=1, now=0.0):
+    for _ in range(n):
+        op = _op(tenant, nbytes)
+        engine.admit(op, now)
+        engine.route(op)
+
+
+# ---------------------------------------------------------------------------
+# the protocol surface
+# ---------------------------------------------------------------------------
+
+
+def test_both_planes_implement_the_stack_module_protocol():
+    """ServeEngine (via SchedulerServeModule), CoreEngine and the
+    jit-free fake all implement ONE protocol — the cluster never needs a
+    concrete class again."""
+    from repro.serve.engine import ServeEngine
+
+    assert issubclass(ServeEngine, StackModule)
+    assert issubclass(ServeEngine, SchedulerServeModule)
+    assert issubclass(CoreEngine, StackModule)
+    assert issubclass(FakeEngine, SchedulerServeModule)
+    # the planes pin their ledger vocabulary on the class
+    assert ServeEngine.conserved_field == "served_tokens"
+    assert CoreEngine.conserved_field == "bytes"
+    assert "served_tokens" in ServeEngine.ledger_fields
+    assert "bytes" in CoreEngine.ledger_fields
+
+
+def test_tenant_state_carries_bucket_counters_and_payload():
+    st = TenantState(plane="serve", bucket={"rate": 5.0, "capacity": 10.0,
+                                            "tokens": 7.5, "updated": 0.0},
+                     carried={"served_tokens": 42},
+                     payload={"queue": [1, 2], "weight": 2.0})
+    assert st.bucket_tokens == 7.5
+    assert list(st.queue) == [1, 2]
+    uncapped = TenantState(plane="bytes", bucket=None, carried={})
+    assert uncapped.bucket_tokens == 0.0
+    assert list(uncapped.queue) == []
+
+
+def test_tenant_load_is_the_placement_signal():
+    e = FakeEngine(batch_slots=2)
+    e.submit(_req(0, k=0, tokens=6))
+    e.submit(_req(0, k=1, tokens=6))
+    e.submit(_req(0, k=2, tokens=6))
+    e.step(now=0.0)                      # 2 slots admit, 1 stays queued
+    tl = e.tenant_load(0)
+    assert isinstance(tl, TenantLoad)
+    assert tl.pending == 1 and tl.inflight == 2
+    assert tl.queued_tokens == 8.0       # prompt(2) + decode(6), charged
+    assert tl.inflight_tokens > 0
+    assert e.load() == pytest.approx(3.0)
+    # a slot whose req was cleared concurrently must not crash the signal
+    e.slots[0].req = None
+    assert e.inflight(0) == 1
+    assert e.tenant_load(0).inflight == 1
+
+
+# ---------------------------------------------------------------------------
+# ConservationLedger: one fold/assert implementation for any plane
+# ---------------------------------------------------------------------------
+
+
+def test_conservation_ledger_folds_and_asserts_across_modules():
+    mods = [CoreEngine(enforcement="account") for _ in range(3)]
+    led = ConservationLedger(mods)
+    assert led.conserved == "bytes"
+    _pump_core(mods[0], 1, 500, n=4)
+    led.assert_conservation(1)
+    assert led.total(1) == 2000
+    # export -> fold -> import: carried+live stays pinned to ground truth
+    st = mods[0].export_tenant(1, now=0.0)
+    led.fold(1, mods[0], st)
+    mods[1].import_tenant(1, st, now=0.0)
+    assert led.total(1) == 2000
+    led.assert_conservation(1)
+    _pump_core(mods[1], 1, 300, n=2)
+    assert led.total(1) == 2600
+    led.assert_conservation(1)
+    assert led.merged("bytes")[1] == 2600
+    assert led.merged("ops")[1] == 6
+    with pytest.raises(KeyError):
+        led.merged("no_such_field")
+    # a tampered carried view is caught by the SAME assert both planes use
+    led.carried["bytes"][1] += 7
+    with pytest.raises(AssertionError, match="bytes"):
+        led.assert_conservation(1)
+
+
+def test_serve_and_bytes_planes_share_the_assert_implementation():
+    """EngineCluster.assert_ledger_conservation is one loop over planes —
+    corrupting EITHER plane's ledger trips the shared assert."""
+    cl = make_fake_cluster(2, core_plane=True)
+    cl.add_tenant(0, engine=0)
+    _pump_core(cl.core_engines[0], 0, 1024, n=3)
+    cl.submit(_req(0))
+    cl.step(now=0.1)
+    cl.assert_ledger_conservation(0)
+    serve_led = cl.serve_plane.ledger
+    bytes_led = cl.planes[1].ledger
+    serve_led.carried["served_tokens"][0] = \
+        serve_led.carried["served_tokens"].get(0, 0) + 5
+    with pytest.raises(AssertionError, match="serve"):
+        cl.assert_ledger_conservation(0)
+    serve_led.carried["served_tokens"][0] -= 5
+    bytes_led.carried["bytes"][0] = bytes_led.carried["bytes"].get(0, 0) + 5
+    with pytest.raises(AssertionError, match="bytes"):
+        cl.assert_ledger_conservation(0)
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: quiesced-destination guard covers ALL live state
+# ---------------------------------------------------------------------------
+
+
+def test_core_import_rejects_destination_with_any_live_state():
+    """Regression: the guard used to check only ``buckets``, so an
+    unbucketed tenant with live ledger/deferred entries on the
+    destination imported silently and corrupted byte continuity."""
+    src = CoreEngine(enforcement="account")
+    src.set_tenant_rate(1, 1000.0)
+    _pump_core(src, 1, 100, n=2)
+    state = src.export_tenant(1, now=0.0)
+
+    # live route-ledger entries, NO bucket: must refuse
+    dst = CoreEngine(enforcement="account")
+    _pump_core(dst, 1, 64)
+    assert 1 not in dst.buckets
+    assert dst.has_tenant(1)
+    with pytest.raises(ValueError, match="live bytes-plane state"):
+        dst.import_tenant(1, state, now=0.0)
+
+    # live deferred entries only (zero-rate bucket tenant that was then
+    # unbucketed): must refuse too
+    dst2 = CoreEngine(enforcement="account")
+    dst2.set_tenant_rate(1, 0.0, burst=0.0)
+    _pump_core(dst2, 1, 64)              # all 64 bytes deferred
+    dst2.export_tenant(1, now=0.0)       # cleanly quiesce...
+    _pump_core(dst2, 1, 32)              # ...then new live state appears
+    with pytest.raises(ValueError):
+        dst2.import_tenant(1, state, now=0.0)
+
+    # a genuinely quiesced destination accepts, and continuity holds
+    dst3 = CoreEngine(enforcement="account")
+    assert not dst3.has_tenant(1)
+    dst3.import_tenant(1, state, now=0.0)
+    assert dst3.buckets[1].rate == 1000.0
+
+
+def test_import_refuses_a_cross_plane_tenant_state():
+    """Bucket snapshots are shape-identical across planes, so a
+    wrong-plane import would silently install a wrong-unit bucket —
+    both planes refuse by TenantState.plane instead."""
+    from repro.serve.scheduler import TenantScheduler
+
+    sched = TenantScheduler(charge_prompt=True)
+    sched.add_tenant(1, rate_tokens_per_s=10.0)
+    serve_state = sched.export_tenant(1, now=0.0)
+
+    core = CoreEngine(enforcement="account")
+    core.set_tenant_rate(2, 1000.0)
+    bytes_state = core.export_tenant(2, now=0.0)
+
+    with pytest.raises(ValueError, match="serve"):
+        core.import_tenant(1, serve_state, now=0.0)
+    with pytest.raises(ValueError, match="bytes"):
+        sched.import_tenant(2, bytes_state, now=0.0)
+    # right-plane imports still land
+    sched.import_tenant(1, serve_state, now=0.0)
+    core.import_tenant(2, bytes_state, now=0.0)
+    assert sched.buckets[1].rate == 10.0
+    assert core.buckets[2].rate == 1000.0
+
+
+def test_cluster_migrate_pre_checks_bytes_plane_before_export():
+    """The cluster's pre-export quiescence check uses the same
+    ``has_tenant`` guard, so a dirty bytes-plane destination aborts the
+    move BEFORE the serve queue is destructively exported."""
+    cl = make_fake_cluster(2, core_plane=True)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0))
+    # dirty destination: live bytes-plane ledger for tenant 0, no bucket
+    _pump_core(cl.core_engines[1], 0, 128)
+    with pytest.raises(ValueError, match="bytes-plane"):
+        cl.migrate(0, 1, now=0.0)
+    # the serve queue never left the source
+    assert cl.engines[0].scheduler.pending(0) == 1
+    assert cl.placement[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# park = real suspend/resume (the memory-saved claim)
+# ---------------------------------------------------------------------------
+
+
+def test_park_suspends_and_frees_bytes_unpark_resumes():
+    cl = make_fake_cluster(3)
+    cl.add_tenant(0, engine=0)
+    per_engine = FakeEngine.FAKE_CACHE_BYTES
+    assert cl.resident_bytes() == 3 * per_engine
+    cl.park(1)
+    cl.park(2)
+    assert cl.engines[1].suspended and cl.engines[2].suspended
+    assert cl.engines[1].slots == []             # slot buffers dropped
+    assert cl.parked_bytes() == 2 * per_engine
+    assert cl.bytes_freed_total == 2 * per_engine
+    assert cl.resident_bytes() == per_engine
+    # the freed bytes integrate per step, like parked_engine_steps
+    cl.submit(_req(0))
+    for _ in range(4):
+        cl.step(now=0.1)
+    assert cl.mem_saved_byte_steps == 4 * 2 * per_engine
+    assert cl.mem_saved() == pytest.approx(2 * per_engine)
+    counters = cl.counters()
+    assert counters["nk_parked_bytes"] == 2 * per_engine
+    assert counters["nk_mem_saved_bytes"] == pytest.approx(2 * per_engine)
+    assert counters["nk_bytes_freed_total"] == 2 * per_engine
+    assert counters["nk_peak_resident_cache_bytes"] == 3 * per_engine
+    # unpark resumes: slots come back, residency returns, and the engine
+    # serves again with its ledger intact
+    cl.unpark(1)
+    assert not cl.engines[1].suspended
+    assert len(cl.engines[1].slots) == cl.engines[1].B
+    assert cl.parked_bytes() == per_engine
+    assert cl.resident_bytes() == 2 * per_engine
+    rec = cl.migrate(0, 1, now=0.5)
+    assert rec is not None
+    cl.submit(_req(0, k=1))
+    for _ in range(8):
+        cl.step(now=0.6)
+    cl.assert_ledger_conservation(0)
+    assert cl.engines[1].scheduler.served_tokens.get(0, 0) > 0
+
+
+def test_suspend_refuses_inflight_work_and_is_idempotent():
+    e = FakeEngine(batch_slots=2)
+    e.submit(_req(0))
+    e.step(now=0.0)
+    assert e.inflight() > 0
+    with pytest.raises(RuntimeError, match="in "):
+        e.suspend()
+    # drain, then suspend cleanly — twice (idempotent)
+    for _ in range(8):
+        e.step(now=0.1)
+    assert e.inflight() == 0
+    assert e.suspend() == FakeEngine.FAKE_CACHE_BYTES
+    assert e.suspend() == 0
+    assert e.resident_bytes() == 0
+    assert e.resume() > 0
+    assert e.resume() == 0
+    # ground truth survived the suspend/resume cycle
+    assert e.billed_ground_truth(0) == e.scheduler.served_tokens[0]
+
+
+def test_parked_engine_conservation_holds_through_suspend():
+    """Suspending drops buffers, never ledgers: conservation (which sums
+    completed-request ground truth on the suspended engine) still holds
+    after the tenant migrated away and the source parked."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0))
+    for _ in range(8):
+        cl.step(now=0.1)                 # request completes on engine 0
+    cl.migrate(0, 1, now=0.2)
+    cl.park(0)                           # source is quiesced: suspend it
+    cl.assert_ledger_conservation(0)
+    assert cl.tenant_served_tokens(0) == cl.tenant_billed_ground_truth(0)
+    assert cl.tenant_served_tokens(0) > 0

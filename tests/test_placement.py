@@ -16,6 +16,7 @@ from repro.control.placement import (
 )
 from repro.core.engine import CoreEngine
 from repro.core.nqe import CommOp
+from repro.fabric import SchedulerServeModule
 from repro.serve.cluster import EngineCluster
 from repro.serve.scheduler import Request, TenantScheduler
 
@@ -32,23 +33,33 @@ class _Slot:
         self.remaining = remaining
 
 
-class FakeEngine:
-    """Slot-for-slot mirror of ServeEngine's admission/billing contract."""
+class FakeEngine(SchedulerServeModule):
+    """Slot-for-slot mirror of ServeEngine's admission/billing contract.
+
+    Inherits the whole serve-plane ``StackModule`` protocol (export /
+    import / conservation / tenant_load / suspend / resume) from the SAME
+    mixin the real engine uses, so the protocol cannot drift between the
+    jitted engine and this jit-free double. Its fake "KV-cache" is
+    ``FAKE_CACHE_BYTES``, dropped on suspend like the real one."""
+
+    FAKE_CACHE_BYTES = 4096
 
     def __init__(self, batch_slots=4):
         self.B = batch_slots
         self.scheduler = TenantScheduler(policy="wfq", charge_prompt=True)
         self.controller = None
-        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.slots = self._make_slots()
         self.completed = []
         self.decode_steps = 0
 
+    def _make_slots(self):
+        return [_Slot() for _ in range(self.B)]
+
+    def _cache_bytes(self):
+        return self.FAKE_CACHE_BYTES
+
     def submit(self, req):
         self.scheduler.submit(req)
-
-    def inflight(self, tenant_id=None):
-        return sum(1 for s in self.slots if s.active and
-                   (tenant_id is None or s.req.tenant_id == tenant_id))
 
     def step(self, now=None):
         for i, s in enumerate(self.slots):
@@ -460,20 +471,50 @@ def test_rebalance_is_a_thin_wrapper_with_legacy_semantics():
     for k in range(2):
         cl.submit(_req(1, k=10 + k))
     cl.submit(_req(2, k=20))
-    rec = cl.rebalance(now=0.0)
+    with pytest.warns(DeprecationWarning):
+        rec = cl.rebalance(now=0.0)
     assert rec is not None
     assert rec.tenant == 0 and rec.src == 0 and rec.dst == 2
     # balanced cluster (same loads everywhere): no-op
     cl2 = make_fake_cluster(2)
     cl2.add_tenant(0, engine=0)
     cl2.add_tenant(1, engine=1)
-    assert cl2.rebalance() is None
+    with pytest.warns(DeprecationWarning):
+        assert cl2.rebalance() is None
     # bad pins keep migrate()'s error contract
-    with pytest.raises(KeyError):
+    with pytest.warns(DeprecationWarning), pytest.raises(KeyError):
         cl.rebalance(tenant=99)
     # pinned tenant moves from wherever it is
-    rec = cl.rebalance(tenant=1, now=0.0)
+    with pytest.warns(DeprecationWarning):
+        rec = cl.rebalance(tenant=1, now=0.0)
     assert rec is not None and rec.tenant == 1
+
+
+def test_rebalance_emits_deprecation_warning():
+    """Satellite: the PR-4 deprecation is now enforced — every
+    ``rebalance()`` call warns, and ``operator_rebalance`` (the
+    ``plan_once(force=True)`` spelling) does the same move silently."""
+    import warnings
+
+    from repro.serve.replay import operator_rebalance
+
+    def hot_cluster():
+        cl = make_fake_cluster(2)
+        cl.add_tenant(0, engine=0)
+        cl.add_tenant(1, engine=1)
+        for k in range(6):
+            cl.submit(_req(0, k=k))
+        return cl
+
+    with pytest.warns(DeprecationWarning, match="plan_once"):
+        legacy = hot_cluster().rebalance(now=0.0)
+    cl = hot_cluster()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # any warning would fail
+        modern = operator_rebalance(cl, now=0.0)
+    # same selection semantics, no deprecated path involved
+    assert (modern.tenant, modern.src, modern.dst) == \
+        (legacy.tenant, legacy.src, legacy.dst)
 
 
 # ---------------------------------------------------------------------------
@@ -498,12 +539,15 @@ def test_core_engine_export_import_moves_bucket_and_folds_ledger():
     assert level == pytest.approx(2000.0)        # 5000 burst - 3x1000
     assert src.total_bytes(1) == 3000
     state = src.export_tenant(1, now=0.0)
-    # the source forgot everything
+    # the source forgot everything (but keeps the billed ground truth)
     assert src.total_bytes(1) == 0 and 1 not in src.buckets
     assert 1 not in src.admitted
-    # exported counters are the carried ledger
-    assert sum(b for _, b in state["ledger"].values()) == 3000
-    assert state["admitted"][1] == 3000          # all in-rate
+    assert src.billed_ground_truth(1) == 3000
+    # exported counters are the carried ledger (flattened + detail)
+    assert state.plane == "bytes"
+    assert state.carried["bytes"] == 3000
+    assert sum(b for _, b in state.payload["ledger"].values()) == 3000
+    assert state.payload["admitted"][1] == 3000  # all in-rate
     dst.import_tenant(1, state, now=0.0)
     # the bucket level travelled; the counters did NOT replay
     assert dst.buckets[1].tokens == pytest.approx(level)

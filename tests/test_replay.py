@@ -44,6 +44,42 @@ def test_replay_smoke_reports_from_real_ledgers():
     assert rep.total_rate() > 0.8 * cap
 
 
+def test_suspend_resume_serves_bit_identical():
+    """Tier-1 tentpole guard: suspend() drops the KV-cache and slot
+    buffers (bytes freed > 0); resume() lazily re-materializes them on
+    the next admission; and serving after the cycle is bit-identical to
+    the never-parked behavior (same generated tokens, same ledger
+    arithmetic) — parking is a real memory saving with no serving cost."""
+    from repro.serve.scheduler import Request
+
+    eng = make_replay_engine(capacity=1e6, batch_slots=2)
+
+    def serve(req_id):
+        eng.submit(Request(tenant_id=0, prompt=[1, 2], max_new_tokens=4,
+                           req_id=req_id, arrival=0.0))
+        for k in range(12):
+            eng.step(now=0.1 * (k + 1))
+        return eng.completed[-1]
+
+    before = serve(0)                      # the never-parked reference
+    resident = eng.resident_bytes()
+    assert resident > 0
+    freed = eng.suspend()
+    assert freed == resident
+    assert eng.resident_bytes() == 0 and eng.caches is None
+    assert eng.slots == []                 # slot buffers dropped too
+    with pytest.raises(RuntimeError):      # a parked engine never steps
+        eng.step(now=9.9)
+    eng.resume()
+    assert eng.caches is None              # lazy: nothing resident yet...
+    after = serve(1)
+    assert eng.resident_bytes() == resident    # ...until a request lands
+    # bit-identical serving: same tokens, same billing as never-parked
+    assert after.generated == before.generated
+    assert eng.scheduler.served_tokens[0] == sum(
+        len(r.prompt) + len(r.generated) for r in eng.completed)
+
+
 def test_single_token_request_billing_matches_bucket_price():
     """Regression: max_new_tokens=1 used to occupy a decode slot anyway,
     generating (and billing) a 2nd token past the bucket's price."""
@@ -169,17 +205,30 @@ def test_replay_migrate_hog_mid_burst_conserves_ledger():
 @pytest.mark.slow
 def test_replay_consolidation_scenario_parks_and_recovers():
     """The closed placement loop on real engines: busy -> idle -> busy.
-    The autopilot packs the idle fleet, parks >= 1 engine (cores saved),
-    and wakes the cluster when load returns — fairness intact."""
-    rep = replay_scenario("consolidation", n_tenants=4, intervals=12,
-                          engines=3)
+    The autopilot packs the idle fleet, parks >= 1 engine (cores AND
+    memory saved — parked engines suspend their KV-caches), and wakes
+    the cluster when load returns — fairness intact and serving
+    bit-identical after resume."""
+    trace, cap = scenario_spec("consolidation", n_tenants=4, intervals=12)
+    cl = make_replay_cluster(capacity=cap, engines=3,
+                             autopilot="consolidate")
+    rep = TraceReplayer(cl, capacity=cap).run(trace)
     assert rep.engines == 3
     assert rep.max_parked >= 1                    # idle window parked
     assert rep.cores_saved > 0
+    # the memory-saved claim: bytes were freed while parked
+    assert rep.max_parked_bytes > 0
+    assert rep.mem_saved_bytes > 0
+    assert rep.peak_resident_cache_bytes > rep.max_parked_bytes
     assert rep.autopilot_moves >= 1               # the loop found the pack
     assert rep.jain() >= 0.95
     # load returned: every tenant is placed and served
     assert all(r.achieved_rate > 0 for r in rep.per_tenant.values())
+    # bit-identical serving across suspend/resume: every request in this
+    # scenario has the same prompt, so a resumed engine whose re-init
+    # cache changed anything would show up as a divergent generation
+    seqs = {tuple(r.generated) for r in cl.completed}
+    assert len(seqs) == 1
     with pytest.raises(ValueError):
         replay_scenario("consolidation", n_tenants=4, intervals=4,
                         engines=1)
