@@ -39,11 +39,19 @@ every applied plan on BOTH planes (serve tokens and collective bytes —
 the cluster runs with a bytes-plane CoreEngine per engine and synthetic
 collective traffic), and zero ping-pong moves under hysteresis.
 
+The autopilot suite also measures claim (h) — the flight recorder's
+disabled path (null-object tracer behind ``if TRACER.enabled`` guards)
+costs < 2% of the mean decode-step time, gated in
+benchmarks/bench_thresholds.json.
+
 ``--json OUT.json`` additionally writes every row, claim and verdict as a
 machine-readable document (the bench trajectory artifact CI uploads);
 ``--smoke`` runs only the autopilot claims on a reduced trace (the CI
 bench-smoke job, gated by tools/check_bench.py against
-benchmarks/bench_thresholds.json).
+benchmarks/bench_thresholds.json); ``--trace OUT.json`` records one
+migration-scenario replay as a Chrome trace-event JSON (validated by
+tools/check_trace.py, loadable in Perfetto) — the CI flight-recorder
+artifact.
 """
 from __future__ import annotations
 
@@ -183,6 +191,8 @@ def run_e2e_isolation() -> Dict:
                    / base.per_tenant[t].achieved_rate, 0.0)
         worst = max(worst, degr)
         rows.append((f"e2e_isolation,tenant{t}_degradation", degr))
+        rows.append((f"e2e_isolation,tenant{t}_p99_admit_wait_s",
+                     shared.per_tenant[t].p99_admit_wait_s))
     hog = shared.per_tenant[n - 1]
     rows.append(("e2e_isolation,hog_served_frac_of_capacity",
                  hog.achieved_rate / cap))
@@ -432,6 +442,10 @@ def run_e2e_hotspot(engines: int = 3,
                    / base.per_tenant[t].achieved_rate, 0.0)
         worst = max(worst, degr)
         rows.append((f"e2e_hotspot,tenant{t}_degradation", degr))
+        rows.append((f"e2e_hotspot,tenant{t}_p99_admit_wait_s",
+                     shared.per_tenant[t].p99_admit_wait_s))
+        rows.append((f"e2e_hotspot,tenant{t}_p99_e2e_s",
+                     shared.per_tenant[t].p99_e2e_s))
     jain = shared.jain()
     moved = [mv.tenant for _, mv in cl.autopilot.move_log]
     hog_moved = 1.0 if moved.count(hog) >= 1 else 0.0
@@ -454,15 +468,94 @@ def run_e2e_hotspot(engines: int = 3,
                      f"conserved"}
 
 
-AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot)
 SMOKE_INTERVALS = 12
+
+
+# ---------------------------------------------------------------------------
+# Flight-recorder overhead (claim: tracing off is free)
+# ---------------------------------------------------------------------------
+
+
+def run_tracer_overhead(intervals: int = SMOKE_INTERVALS) -> Dict:
+    """Claim (h): with tracing disabled, the flight recorder costs nothing.
+
+    Every instrumentation site is guarded by ``if tracing.TRACER.enabled``
+    against a null-object tracer, so the disabled path is one module-attr
+    load and a branch. This bench measures that guard directly (micro
+    loop), counts how many trace points a real replayed decode step
+    actually hits (enabled run over the steady scenario), and bounds the
+    disabled-path overhead as a fraction of the measured mean step time:
+
+        disabled_step_overhead_frac = guard_ns * events_per_step
+                                      / mean_step_ns
+
+    Gated at < 2% in bench_thresholds.json — the machine-independent form
+    of "tokens/s regresses < 2% with tracing disabled" (overhead per step
+    below 2% of step time bounds the throughput regression at 2%),
+    robust to CI runner speed where a raw wall tokens/s floor is not.
+    """
+    import time
+
+    from repro.obs import tracing
+    from repro.serve.replay import scenario_spec
+
+    if tracing.TRACER.enabled:
+        return {"rows": [], "ok": False,
+                "claim": "tracer unexpectedly enabled at bench start"}
+
+    # 1. the disabled guard, measured directly (exactly the hot-site
+    # pattern: module attr load, .enabled load, branch)
+    n = 200_000
+    t0 = time.perf_counter()
+    hits = 0
+    for _ in range(n):
+        if tracing.TRACER.enabled:
+            hits += 1
+    guard_ns = (time.perf_counter() - t0) / n * 1e9
+    assert hits == 0
+
+    # 2. mean step time on the real datapath, tracer disabled. First run
+    # warms the jit caches; the second, on a fresh engine with identical
+    # shapes, times the steady-state step.
+    trace, cap = scenario_spec("steady", n_tenants=E2E_TENANTS,
+                               intervals=intervals)
+    _e2e_report(trace, cap)
+    t0 = time.perf_counter()
+    rep = _e2e_report(trace, cap)
+    wall_s = time.perf_counter() - t0
+    steps = max(rep.decode_steps, 1)
+    mean_step_s = wall_s / steps
+    tokens_per_s_wall = sum(r.served_tokens
+                            for r in rep.per_tenant.values()) / wall_s
+
+    # 3. trace points per step, counted from an enabled run of the same
+    # scenario (arrival/admit/dispatch/finish + control-plane instants)
+    from repro.obs.tracing import trace_to
+    with trace_to() as tr:
+        _e2e_report(trace, cap)
+    events_per_step = len(tr.events) / steps
+
+    frac = guard_ns * 1e-9 * events_per_step / mean_step_s
+    rows = [("tracer_overhead,disabled_guard_ns", guard_ns),
+            ("tracer_overhead,events_per_step", events_per_step),
+            ("tracer_overhead,mean_step_us", mean_step_s * 1e6),
+            ("tracer_overhead,tokens_per_s_wall", tokens_per_s_wall),
+            ("tracer_overhead,disabled_step_overhead_frac", frac)]
+    return {"rows": rows, "ok": frac < 0.02,
+            "claim": f"disabled-path guard {guard_ns:.0f}ns x "
+                     f"{events_per_step:.1f} trace points/step = "
+                     f"{frac:.5%} of the {mean_step_s * 1e6:.0f}us mean "
+                     f"step (< 2%): tracing off is free"}
+
+
+AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot)
 
 
 def _parse_args(argv):
     opts = {"e2e": "--e2e" in argv, "smoke": "--smoke" in argv,
             "autopilot": "--autopilot" in argv, "engines": 1,
-            "json": None}
-    for flag in ("--engines", "--json"):
+            "json": None, "trace": None}
+    for flag in ("--engines", "--json", "--trace"):
         if flag in argv:
             i = argv.index(flag)
             if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
@@ -484,6 +577,8 @@ def _parse_args(argv):
     if opts["smoke"] and not opts["autopilot"]:
         raise SystemExit("--smoke runs only the autopilot claims: "
                          "add --autopilot")
+    if opts["trace"] and not opts["e2e"]:
+        raise SystemExit("--trace records the real datapath: add --e2e")
     return opts
 
 
@@ -504,6 +599,11 @@ def main(argv=None) -> None:
                 return fn(n, intervals=iv)
             bench_ap.__name__ = fn.__name__
             benches.append(bench_ap)
+
+        def bench_tracer(iv=intervals):
+            return run_tracer_overhead(intervals=iv)
+        bench_tracer.__name__ = "run_tracer_overhead"
+        benches.append(bench_tracer)
     print("name,value")
     failures, results = 0, []
     for bench in benches:
@@ -516,6 +616,17 @@ def main(argv=None) -> None:
         results.append({"bench": bench.__name__, "ok": out["ok"],
                         "claim": out["claim"],
                         "metrics": {n: v for n, v in out["rows"]}})
+    if opts["trace"]:
+        # flight-recorder artifact: one full migration-scenario replay
+        # (operator rebalance + maintenance drain/park/unpark) recorded as
+        # Chrome trace-event JSON — tools/check_trace.py validates it,
+        # chrome://tracing / Perfetto load it
+        from repro.serve.replay import replay_scenario
+        replay_scenario("migration", n_tenants=E2E_TENANTS,
+                        intervals=max(intervals, SMOKE_INTERVALS),
+                        trace_path=opts["trace"])
+        print(f"wrote {opts['trace']} (migration scenario trace)",
+              file=sys.stderr)
     if opts["json"]:
         doc = {"ok": failures == 0,
                "suite": ("smoke" if opts["smoke"] else

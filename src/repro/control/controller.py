@@ -34,6 +34,7 @@ from repro.control.telemetry import (
     EngineTelemetry, SchedulerTelemetry, TenantObs, format_prometheus,
     merge_obs,
 )
+from repro.obs import tracing
 
 _PROBE_FRAC = 0.02     # idle-enforcement-point floor, fraction of allocation
 
@@ -136,7 +137,13 @@ class RateController:
             # pushing allocations computed from zeros would stall everyone
             return {}
         self.allocations = self.algo.allocate(merged, self.capacity)
+        calls_before = self.push_calls
         self._push(now)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant(
+                "controller", "rate.push", now,
+                tenants=len(self.allocations),
+                calls=self.push_calls - calls_before)
         self.history.append(dict(self.allocations))
         self.ticks += 1
         return self.allocations

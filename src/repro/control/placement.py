@@ -45,6 +45,7 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from repro.control.telemetry import SchedulerTelemetry, merge_obs
+from repro.obs import tracing
 
 # an idle tenant still occupies a placement slot: give it a tiny demand so
 # bin-packing keeps it *somewhere* instead of dividing by zero around it
@@ -501,6 +502,11 @@ class PlacementController:
         now = time.monotonic() if now is None else float(now)
         view = self.view(now)
         plan = self._gate(self.policy.plan(view, now), now)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant(
+                "placement", "placement.plan", now,
+                policy=self.policy.name, moves=len(plan.moves),
+                park=len(plan.park), unpark=len(plan.unpark))
         self._apply(plan, now)
         return plan
 
@@ -521,6 +527,12 @@ class PlacementController:
             plan = self.policy.plan(view, now)
         if not force:
             plan = self._gate(plan, now)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant(
+                "placement", "placement.plan", now,
+                policy=self.policy.name, moves=len(plan.moves),
+                park=len(plan.park), unpark=len(plan.unpark),
+                one_shot=True)
         self._apply(plan, now)
         return plan
 

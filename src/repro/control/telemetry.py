@@ -20,12 +20,17 @@ import time
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.obs import tracing
+from repro.obs.metrics import render_prometheus
+
 
 def format_prometheus(counters: Dict[str, float]) -> str:
     """Render a ``counters()`` dict in Prometheus text format — the one
-    formatter every exporter (telemetry, controller, cluster) shares."""
-    return "\n".join(f"{name} {value:.6g}"
-                     for name, value in counters.items()) + "\n"
+    formatter every exporter (telemetry, controller, cluster) shares.
+    Delegates to :func:`repro.obs.metrics.render_prometheus`, which emits
+    ``# HELP``/``# TYPE`` lines, escapes label values and renders
+    ``+Inf``/``NaN`` per the exposition-format rules."""
+    return render_prometheus(counters)
 
 
 @dataclass
@@ -127,12 +132,16 @@ class EngineTelemetry:
         self._prev_offered, self._prev_deferred = offered, deferred
         self._prev_t = now
         self.updates += 1
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant("telemetry", "telemetry.tick", now,
+                                   plane="bytes", tenants=len(self.obs))
         return self.obs
 
     # -- exportable counters ------------------------------------------------
     def counters(self) -> Dict[str, float]:
         ledger, deferred = self.engine.snapshot()
-        out: Dict[str, float] = {"telemetry_updates_total": self.updates}
+        out: Dict[str, float] = {
+            'telemetry_updates_total{plane="bytes"}': self.updates}
         for (t, _verb, axes), (_ops, nbytes) in sorted(ledger.items()):
             if self._axes_match(axes):
                 key = f'tenant="{t}",axes="{"+".join(axes) or "none"}"'
@@ -201,10 +210,14 @@ class SchedulerTelemetry:
             self.obs[t] = TenantObs(rate=r, offered=r, queue=q)
         self._prev_served, self._prev_t = served, now
         self.updates += 1
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant("telemetry", "telemetry.tick", now,
+                                   plane="serve", tenants=len(self.obs))
         return self.obs
 
     def counters(self) -> Dict[str, float]:
-        out: Dict[str, float] = {"telemetry_updates_total": self.updates}
+        out: Dict[str, float] = {
+            'telemetry_updates_total{plane="serve"}': self.updates}
         for t, n in sorted(self.scheduler.served_tokens.items()):
             out[f'nk_served_tokens_total{{tenant="{t}"}}'] = n
         for t, o in sorted(self.obs.items()):

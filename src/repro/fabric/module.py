@@ -38,6 +38,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import tracing
+from repro.obs.hist import TenantHistograms
+
 
 @dataclass
 class TenantState:
@@ -207,6 +210,9 @@ class SchedulerServeModule(StackModule):
                      "admit_wait_sum")
     conserved_field = "served_tokens"
     suspended = False
+    # logical trace track this module's request events land on; the
+    # cluster renames per engine ("engine0", "engine1", ...)
+    trace_name = "engine"
 
     # -- subclass hooks -----------------------------------------------------
     def _make_slots(self) -> List:
@@ -251,6 +257,50 @@ class SchedulerServeModule(StackModule):
                     and s.req.tenant_id == tenant_id:
                 total += len(s.req.prompt) + len(s.req.generated)
         return float(total)
+
+    # -- latency observability ----------------------------------------------
+    def latency_hists(self) -> Dict[str, TenantHistograms]:
+        """Per-tenant TTFT / e2e histogram families, lazily created per
+        instance (this is a mixin without an ``__init__``). Engine-side:
+        like completed-request records, they never migrate — a tenant's
+        tail is attributed to the engine that served it."""
+        h = self.__dict__.get("_latency_hists")
+        if h is None:
+            h = self._latency_hists = {
+                "nk_ttft_seconds": TenantHistograms("nk_ttft_seconds"),
+                "nk_e2e_seconds": TenantHistograms("nk_e2e_seconds")}
+        return h
+
+    def observe_admitted(self, req) -> None:
+        """Record one request's dispatch into a decode slot: TTFT (the
+        first token exists the moment prefill ran) + a trace instant."""
+        if req.arrival >= 0.0 and req.admit_time >= 0.0:
+            self.latency_hists()["nk_ttft_seconds"].observe(
+                req.tenant_id, max(req.admit_time - req.arrival, 0.0))
+        if tracing.TRACER.enabled and req.admit_time >= 0.0:
+            tracing.TRACER.instant(
+                self.trace_name, "request.dispatch", req.admit_time,
+                tenant=req.tenant_id, req=req.req_id)
+
+    def observe_finished(self, req) -> None:
+        """Record one request's completion: e2e latency + a trace
+        instant."""
+        if req.arrival >= 0.0 and req.finish_time >= 0.0:
+            self.latency_hists()["nk_e2e_seconds"].observe(
+                req.tenant_id, max(req.finish_time - req.arrival, 0.0))
+        if tracing.TRACER.enabled and req.finish_time >= 0.0:
+            tracing.TRACER.instant(
+                self.trace_name, "request.finish", req.finish_time,
+                tenant=req.tenant_id, req=req.req_id,
+                generated=len(req.generated))
+
+    def latency(self) -> Dict[str, TenantHistograms]:
+        """All three latency families for this module: the scheduler's
+        admit-wait (which migrates with its tenants) plus the engine-side
+        TTFT / e2e."""
+        out = dict(self.latency_hists())
+        out["nk_admit_wait_seconds"] = self.scheduler.admit_wait_hist
+        return out
 
     # -- placement signals --------------------------------------------------
     def inflight(self, tenant_id: Optional[int] = None) -> int:

@@ -1,0 +1,19 @@
+"""Observability substrate: metrics registry, span tracer, latency
+histograms. Pure stdlib — importable without jax (tools and CI scripts
+scrape/validate without touching the data plane)."""
+from repro.obs.hist import DEFAULT_BUCKETS, Histogram, TenantHistograms
+from repro.obs.metrics import (METRIC_HELP, MetricsRegistry,
+                               escape_label_value, format_value,
+                               parse_prometheus_text, parse_series_key,
+                               render_prometheus, render_series)
+from repro.obs.tracing import (TRACER, NullTracer, Tracer, get_tracer,
+                               set_tracer, trace_to)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "Histogram", "TenantHistograms",
+    "METRIC_HELP", "MetricsRegistry", "escape_label_value", "format_value",
+    "parse_prometheus_text", "parse_series_key", "render_prometheus",
+    "render_series",
+    "TRACER", "NullTracer", "Tracer", "get_tracer", "set_tracer",
+    "trace_to",
+]

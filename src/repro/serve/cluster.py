@@ -60,6 +60,8 @@ from typing import Dict, List, Optional, Sequence, Set
 
 from repro.control.telemetry import format_prometheus
 from repro.fabric import StackPlane, TenantState
+from repro.obs import tracing
+from repro.obs.hist import TenantHistograms
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request
 
@@ -180,6 +182,11 @@ class EngineCluster:
         self.engines: List[ServeEngine] = list(engines)
         if not self.engines:
             raise ValueError("EngineCluster needs at least one engine")
+        for k, e in enumerate(self.engines):
+            # one trace track per engine: request lifecycle events from
+            # the engine and its scheduler land on the same timeline
+            e.trace_name = f"engine{k}"
+            e.scheduler.trace_track = f"engine{k}"
         for e in self.engines:
             if e.controller is not None:
                 raise ValueError(
@@ -288,7 +295,7 @@ class EngineCluster:
         self.max_parked = max(self.max_parked, len(self.parked))
         self._note_resident()
         self._collect_completed()
-        self._poll_drains()
+        self._poll_drains(now)
         if self.autopilot is not None and \
                 self.steps % self.place_every == 0:
             self.autopilot.tick(time.monotonic() if now is None else now)
@@ -362,7 +369,13 @@ class EngineCluster:
             return False
         return self.engines[k].load() == 0
 
-    def park(self, k: int) -> None:
+    def _trace_ts(self, now: Optional[float]) -> float:
+        """Timestamp for a control-plane trace event: the caller's clock
+        when given, else the step count (wall-clock callers that never
+        pass ``now`` still get a monotonic timeline)."""
+        return float(self.steps) if now is None else float(now)
+
+    def park(self, k: int, *, now: Optional[float] = None) -> None:
         """Put a quiesced engine to sleep: it stops stepping (saved cores)
         AND every plane's module at ``k`` suspends — KV-cache, slot table
         and scratch are dropped (saved memory) — until ``unpark``. Raises
@@ -381,8 +394,11 @@ class EngineCluster:
         freed = sum(plane.modules[k].suspend() for plane in self.planes)
         self._suspended_bytes[k] = freed
         self.bytes_freed_total += freed
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant("cluster", "park", self._trace_ts(now),
+                                   engine=k, freed_bytes=freed)
 
-    def unpark(self, k: int) -> None:
+    def unpark(self, k: int, *, now: Optional[float] = None) -> None:
         """Wake a parked engine: every plane's module ``resume``s (the
         KV-cache re-materializes lazily on the first admission) and it
         can step and host tenants again immediately."""
@@ -394,6 +410,9 @@ class EngineCluster:
         for plane in self.planes:
             plane.modules[k].resume()
         self._suspended_bytes.pop(k, None)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant("cluster", "unpark", self._trace_ts(now),
+                                   engine=k)
 
     def cores_saved(self) -> float:
         """Average engines parked per cluster step so far — the closed-loop
@@ -464,6 +483,7 @@ class EngineCluster:
                     f"on every plane")
         totals_before = {p.name: p.ledger.total(tenant) for p in self.planes}
         inflight = self.engines[src].tenant_load(tenant).inflight
+        ts = self._trace_ts(now)
         serve_state: Optional[TenantState] = None
         for plane in self.planes:
             state = plane.modules[src].export_tenant(tenant, now)
@@ -471,6 +491,16 @@ class EngineCluster:
             plane.modules[dst].import_tenant(tenant, state, now)
             if plane is self.serve_plane:
                 serve_state = state
+        if tracing.TRACER.enabled:
+            tracing.TRACER.span(
+                "cluster", "migrate.transfer", ts, ts, tenant=tenant,
+                src=src, dst=dst, queued=len(serve_state.queue),
+                inflight=inflight)
+            # the drain window [move, finalize] as an async pair keyed by
+            # tenant — drains of different tenants overlap on this track
+            tracing.TRACER.async_begin("cluster", "migrate.drain",
+                                       tenant, ts, tenant=tenant, src=src,
+                                       inflight=inflight)
         self.placement[tenant] = dst
         if self.controller is not None:
             self.controller.invalidate_tenant(tenant)
@@ -492,7 +522,7 @@ class EngineCluster:
         if inflight:
             self.draining[tenant] = src
         else:
-            self._finalize(rec)
+            self._finalize(rec, now)
         return rec
 
     def rebalance(self, *, tenant: Optional[int] = None,
@@ -541,7 +571,7 @@ class EngineCluster:
         records: List[MigrationRecord] = []
         for k in plan.unpark:
             if k in self.parked:
-                self.unpark(k)
+                self.unpark(k, now=now)
         for mv in plan.moves:
             if mv.tenant not in self.placement or \
                     mv.tenant in self.draining:
@@ -555,15 +585,24 @@ class EngineCluster:
                 records.append(rec)
         for k in plan.park:
             if k not in self.parked and self.parkable(k):
-                self.park(k)
+                self.park(k, now=now)
         return records
 
-    def _finalize(self, rec: MigrationRecord) -> None:
+    def _finalize(self, rec: MigrationRecord,
+                  now: Optional[float] = None) -> None:
         rec.finalized_step = self.steps
         self.migrations_completed += 1
         self.assert_ledger_conservation(rec.tenant)
+        if tracing.TRACER.enabled:
+            ts = self._trace_ts(now)
+            tracing.TRACER.async_end("cluster", "migrate.drain",
+                                     rec.tenant, ts)
+            tracing.TRACER.span(
+                "cluster", "migrate.finalize", ts, ts, tenant=rec.tenant,
+                src=rec.src, dst=rec.dst,
+                drained_steps=rec.finalized_step - rec.started_step)
 
-    def _poll_drains(self) -> None:
+    def _poll_drains(self, now: Optional[float] = None) -> None:
         serve = self.serve_plane
         for tenant, src in list(self.draining.items()):
             if serve.modules[src].tenant_load(tenant).inflight:
@@ -579,7 +618,7 @@ class EngineCluster:
             del self.draining[tenant]
             rec = next(r for r in reversed(self.migration_log)
                        if r.tenant == tenant)
-            self._finalize(rec)
+            self._finalize(rec, now)
 
     def _collect_completed(self) -> None:
         for k, e in enumerate(self.engines):
@@ -626,6 +665,18 @@ class EngineCluster:
             plane.ledger.assert_conservation(tenant, plane=plane.name)
 
     # -- reporting ----------------------------------------------------------
+    def latency(self) -> Dict[str, TenantHistograms]:
+        """Cluster-global per-tenant latency families (admit wait, TTFT,
+        e2e): every serve module's histograms merged. Continuous across
+        migrations — the admit-wait counts travel with the tenant, the
+        engine-side TTFT/e2e counts stay where they were served."""
+        out: Dict[str, TenantHistograms] = {}
+        for m in self.serve_plane.modules:
+            for name, th in m.latency().items():
+                out[name] = out[name].merged(th) if name in out \
+                    else th.merged(TenantHistograms(name, th.edges))
+        return out
+
     def counters(self) -> Dict[str, float]:
         """Placement/migration counters (Prometheus naming), merged with
         the shared controller's."""
@@ -655,6 +706,14 @@ class EngineCluster:
                 float(k in self.parked)
             out[f'nk_engine_decode_steps_total{{engine="{k}"}}'] = \
                 float(e.decode_steps)
+        # recent moves as info series (value = cluster step the move
+        # started at) — what nk_top's "recent autopilot moves" pane reads
+        for rec in self.migration_log[-5:]:
+            out[f'nk_migration_info{{seq="{rec.started_step}",'
+                f'tenant="{rec.tenant}",src="{rec.src}",'
+                f'dst="{rec.dst}"}}'] = float(rec.started_step)
+        for th in self.latency().values():
+            out.update(th.counters())
         if self.autopilot is not None and \
                 hasattr(self.autopilot, "counters"):
             out.update(self.autopilot.counters())

@@ -149,6 +149,7 @@ class ServeEngine(SchedulerServeModule):
             first = int(jnp.argmax(last_logits[0]))
             req.generated.append(first)
             req.admit_time = time.monotonic() if now is None else now
+            self.observe_admitted(req)
             # prompt tokens + the first generated token: prefill produced
             # both, so the ledger must bill them here — decode steps only
             # account the tokens they themselves produce (leaving the
@@ -161,6 +162,7 @@ class ServeEngine(SchedulerServeModule):
                 # over-bill) past the bucket's prompt+max_new price
                 req.finish_time = req.admit_time
                 self.completed.append(req)
+                self.observe_finished(req)
                 continue
             self.slots[i] = Slot(active=True, req=req,
                                  pos=len(req.prompt),
@@ -199,6 +201,7 @@ class ServeEngine(SchedulerServeModule):
             if s.remaining <= 0 or s.pos >= self.max_seq - 1:
                 s.req.finish_time = time.monotonic() if now is None else now
                 self.completed.append(s.req)
+                self.observe_finished(s.req)
                 self.slots[i] = Slot()
         self.decode_steps += 1
         self.step_times.append(time.monotonic() - t0)

@@ -43,7 +43,12 @@ from repro.serve.scheduler import Request, TenantScheduler
 
 @dataclass
 class TenantReport:
-    """One tenant's end-to-end outcome, straight from the ledgers."""
+    """One tenant's end-to-end outcome, straight from the ledgers.
+
+    The percentile columns are histogram estimates (upper edge of the
+    bucket the quantile falls in — within one log-bucket width of the
+    true sample quantile, see ``repro.obs.hist``), windowed to this run
+    like every other counter. 0.0 when the window observed no samples."""
 
     demand_rate: float            # offered load, tokens/s
     achieved_rate: float          # served tokens/s over the replay window
@@ -53,6 +58,10 @@ class TenantReport:
     deferred_polls: int
     mean_admit_wait_s: float
     weight: float = 1.0
+    p50_admit_wait_s: float = 0.0
+    p99_admit_wait_s: float = 0.0
+    p99_ttft_s: float = 0.0
+    p99_e2e_s: float = 0.0
 
 
 @dataclass
@@ -225,6 +234,15 @@ class TraceReplayer:
         mem0 = getattr(self.engine, "mem_saved_byte_steps", 0)
         pilot = getattr(self.engine, "autopilot", None)
         pilot_moves0 = getattr(pilot, "moves_applied", 0)
+        # window the latency histograms like every other counter: snapshot
+        # per-tenant counts now, diff at the end (engine and cluster both
+        # expose latency() -> {metric: TenantHistograms})
+        lat_fn = getattr(self.engine, "latency", None)
+        lat0: Dict[str, Dict[int, object]] = {}
+        if lat_fn is not None:
+            for mname, th in lat_fn().items():
+                lat0[mname] = {t: h.copy()
+                               for t, h in th.per_tenant.items()}
 
         ev: Dict[int, list] = {}
         for idx, fn in (events or ()):
@@ -267,6 +285,17 @@ class TraceReplayer:
         completed: Dict[int, int] = {}
         for req in self.engine.completed[completed0:]:
             completed[req.tenant_id] = completed.get(req.tenant_id, 0) + 1
+        lat_now = lat_fn() if lat_fn is not None else {}
+
+        def _q(mname: str, tenant: int, q: float) -> float:
+            th = lat_now.get(mname)
+            h = th.per_tenant.get(tenant) if th is not None else None
+            if h is None:
+                return 0.0
+            snap = lat0.get(mname, {}).get(tenant)
+            win = h.since(snap) if snap is not None else h
+            return win.quantile(q) if win.total else 0.0
+
         per_tenant: Dict[int, TenantReport] = {}
         for i in range(n):
             # every counter is windowed to THIS run: repeated run() calls on
@@ -283,6 +312,10 @@ class TraceReplayer:
                 deferred_polls=sched.deferred_polls.get(i, 0) - deferred0[i],
                 mean_admit_wait_s=wait / adm if adm else 0.0,
                 weight=self.weights.get(i, 1.0),
+                p50_admit_wait_s=_q("nk_admit_wait_seconds", i, 0.50),
+                p99_admit_wait_s=_q("nk_admit_wait_seconds", i, 0.99),
+                p99_ttft_s=_q("nk_ttft_seconds", i, 0.99),
+                p99_e2e_s=_q("nk_e2e_seconds", i, 0.99),
             )
         placement = getattr(self.engine, "placement", None)
         cl_steps = getattr(self.engine, "steps", 0) - cl_steps0
@@ -493,6 +526,60 @@ def operator_rebalance(cluster, now=None, *, pin_tenant=None):
     return cluster.migration_log[before]
 
 
+class MaintenanceWindow:
+    """Scripted engine maintenance as replay events: drain the coolest
+    engine (migrate its tenants off), park it once quiesced, unpark it a
+    couple of intervals later.
+
+    The migration scenario runs one of these so a single replay exercises
+    the *whole* stack-module lifecycle — migrate, drain, finalize, park
+    (suspend), unpark (resume) — and its Chrome trace shows every phase
+    on one timeline. ``park`` is safe to schedule on consecutive
+    intervals: it no-ops until the drained engine's in-flight slots ran
+    dry, and again once the engine is asleep."""
+
+    def __init__(self):
+        self.engine: Optional[int] = None
+        self.parked = False
+
+    def drain(self, cluster, now=None):
+        """Pick the coolest engine and migrate every tenant off it."""
+        self.engine = k = cluster.coolest_engine()
+        for t, e in sorted(cluster.placement.items()):
+            if e == k and t not in cluster.draining:
+                dst = min((j for j in cluster.active_engines() if j != k),
+                          key=lambda j: (cluster.engine_load(j), j))
+                cluster.migrate(t, dst, now=now)
+        return k
+
+    def park(self, cluster, now=None):
+        if self.engine is None or self.parked:
+            return
+        if cluster.parkable(self.engine):
+            cluster.park(self.engine, now=now)
+            self.parked = True
+
+    def unpark(self, cluster, now=None):
+        if self.parked:
+            cluster.unpark(self.engine, now=now)
+            self.parked = False
+
+
+def migration_events(intervals: int):
+    """The migration scenario's operator script: the mid-window
+    hot->cool rebalance, then (window permitting) a maintenance
+    park/unpark of the coolest engine near the end."""
+    half = max(intervals // 2, 1)
+    events = [(half, operator_rebalance)]
+    if intervals >= half + 5:
+        mw = MaintenanceWindow()
+        events += [(intervals - 4, mw.drain),
+                   (intervals - 3, mw.park),
+                   (intervals - 2, mw.park),      # retry if still draining
+                   (intervals - 1, mw.unpark)]
+    return events
+
+
 # row index of the misbehaver in the adversarial trace (multiplex's default)
 ADVERSARIAL_HOG = -1
 
@@ -507,23 +594,35 @@ def adversarial_baseline(trace: Trace) -> Trace:
 def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                     capacity: Optional[float] = None, engine=None,
                     push_mode: str = "full", weights=None,
-                    seed: int = 0, engines: int = 1, autopilot=None,
-                    core_plane: bool = False) -> ReplayReport:
+                    seed: int = 0, engines: Optional[int] = None,
+                    autopilot=None, core_plane: bool = False,
+                    trace_path=None) -> ReplayReport:
     """Run one named scenario end-to-end and return the measured report.
 
     ``engines`` > 1 drives an ``EngineCluster`` (N ServeEngines behind one
-    shared controller) instead of a single engine. The ``migration``
-    scenario requires a cluster: mid-window the operator rebalances the
-    hottest engine, so the report includes at least one live migration.
+    shared controller) instead of a single engine; None picks the
+    scenario's natural scale (3 engines for the cluster scenarios, 1
+    otherwise). The ``migration`` scenario requires a cluster: mid-window
+    the operator rebalances the hottest engine, and near the end a
+    maintenance window drains, parks and unparks the coolest one — one
+    replay exercises the whole stack-module lifecycle.
 
     ``autopilot`` closes the placement loop on the cluster (policy name or
     a ``PlacementController``); the ``consolidation`` and ``hotspot``
     scenarios run their natural policy by default — no operator events,
     the loop finds the moves itself. ``core_plane`` attaches a bytes-plane
     CoreEngine per ServeEngine so every move carries both planes.
+
+    ``trace_path``: write the run's flight-recorder timeline (Chrome
+    trace-event JSON, loadable in Perfetto) to this path. A recording
+    tracer is installed for the duration of the run and restored after.
     """
+    from repro.obs.tracing import trace_to
+
     # fail fast, before any engine construction (jit compiles are minutes)
     needs_cluster = name in CLUSTER_SCENARIOS
+    if engines is None:
+        engines = 3 if (needs_cluster and engine is None) else 1
     if needs_cluster and (engines < 2 if engine is None
                           else not hasattr(engine, "migrate")):
         raise ValueError(f"the {name} scenario needs a cluster: "
@@ -553,6 +652,11 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
         eng.attach_autopilot(autopilot)
     events = None
     if name == "migration":
-        events = [(max(intervals // 2, 1), operator_rebalance)]
+        events = migration_events(intervals)
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
-    return rep.run(trace, events=events)
+    if trace_path is None:
+        return rep.run(trace, events=events)
+    with trace_to() as tr:
+        report = rep.run(trace, events=events)
+    tr.write(trace_path)
+    return report

@@ -18,6 +18,8 @@ from typing import Deque, Dict, List, Optional
 
 from repro.core.engine import TokenBucket
 from repro.fabric import TenantState
+from repro.obs import tracing
+from repro.obs.hist import Histogram, TenantHistograms
 
 
 @dataclass
@@ -56,6 +58,12 @@ class TenantScheduler:
         self.admitted_requests: Dict[int, int] = {}
         self.deferred_polls: Dict[int, int] = {}
         self.admit_wait_sum: Dict[int, float] = {}
+        # per-tenant arrival->admission wait distribution (log buckets);
+        # migrates with the tenant (export/import carry the counts)
+        self.admit_wait_hist = TenantHistograms("nk_admit_wait_seconds")
+        # trace track this scheduler's admission events land on; the
+        # owning engine/cluster renames it ("engine0", ...)
+        self.trace_track = "scheduler"
         self._rr = itertools.count()
         self._rr_order: List[int] = []
 
@@ -130,6 +138,7 @@ class TenantScheduler:
         self.admitted_requests.pop(tenant_id, None)
         self.deferred_polls.pop(tenant_id, None)
         self.admit_wait_sum.pop(tenant_id, None)
+        self.admit_wait_hist.pop(tenant_id)
         if tenant_id in self._rr_order:
             self._rr_order.remove(tenant_id)
 
@@ -165,6 +174,12 @@ class TenantScheduler:
                 "queue": list(self.queues.get(tenant_id, ())),
                 "weight": self.weights.get(tenant_id, 1.0),
             })
+        wait_hist = self.admit_wait_hist.per_tenant.get(tenant_id)
+        if wait_hist is not None:
+            # the wait distribution travels with the tenant (unlike the
+            # carried counters it IS replayed into the destination — a
+            # histogram merge cannot read as a rate spike to telemetry)
+            state.payload["admit_wait_hist"] = wait_hist.to_payload()
         self.drop_tenant(tenant_id)
         return state
 
@@ -196,6 +211,10 @@ class TenantScheduler:
         if state.bucket is not None:
             self.buckets[tenant_id] = TokenBucket.restore(
                 state.bucket, now)
+        hist_payload = state.payload.get("admit_wait_hist")
+        if hist_payload is not None:
+            self.admit_wait_hist.absorb(
+                tenant_id, Histogram.from_payload(hist_payload))
 
     def submit(self, req: Request):
         """Enqueue one request; an unknown tenant is auto-registered at
@@ -203,6 +222,10 @@ class TenantScheduler:
         if req.tenant_id not in self.queues:
             self.add_tenant(req.tenant_id)
         self.queues[req.tenant_id].append(req)
+        if tracing.TRACER.enabled and req.arrival >= 0.0:
+            tracing.TRACER.instant(self.trace_track, "request.arrival",
+                                   req.arrival, tenant=req.tenant_id,
+                                   req=req.req_id)
 
     def pending(self, tenant_id: Optional[int] = None) -> int:
         """Unadmitted queued requests for one tenant (or all, if None)."""
@@ -229,6 +252,9 @@ class TenantScheduler:
         ok = b.wait_time(self._cost(head), now) <= 0.0
         if not ok:
             self.deferred_polls[t] = self.deferred_polls.get(t, 0) + 1
+            if tracing.TRACER.enabled and now is not None:
+                tracing.TRACER.instant(self.trace_track, "request.defer",
+                                       now, tenant=t, req=head.req_id)
         return ok
 
     def next_request(self, now: Optional[float] = None) -> Optional[Request]:
@@ -259,8 +285,14 @@ class TenantScheduler:
             b.consume(self._cost(req), now)
         self.admitted_requests[t] = self.admitted_requests.get(t, 0) + 1
         if now is not None and req.arrival >= 0.0:
+            wait = max(now - req.arrival, 0.0)
             self.admit_wait_sum[t] = \
-                self.admit_wait_sum.get(t, 0.0) + max(now - req.arrival, 0.0)
+                self.admit_wait_sum.get(t, 0.0) + wait
+            self.admit_wait_hist.observe(t, wait)
+            if tracing.TRACER.enabled:
+                tracing.TRACER.instant(self.trace_track, "request.admit",
+                                       now, tenant=t, req=req.req_id,
+                                       wait_s=round(wait, 6))
         return req
 
     # -- accounting (engine reports completed work) -------------------------

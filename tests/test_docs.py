@@ -16,6 +16,13 @@ def test_replay_md_code_blocks_are_true():
     assert results.failed == 0
 
 
+def test_observability_md_code_blocks_are_true():
+    results = doctest.testfile(str(ROOT / "docs" / "observability.md"),
+                               module_relative=False)
+    assert results.attempted > 0
+    assert results.failed == 0
+
+
 def test_docs_and_readme_links_resolve():
     proc = subprocess.run(
         [sys.executable, str(ROOT / "tools" / "check_docs.py")],

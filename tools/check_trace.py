@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Validate a fabric flight-recorder trace (Chrome trace-event JSON).
+
+    python tools/check_trace.py TRACE.json [--scenario migration]
+
+Checks, in order:
+  * the file is well-formed JSON with a ``traceEvents`` list;
+  * every event has the required fields for its phase (``ph``), with
+    numeric ``ts`` and known phases only;
+  * per (pid, tid) track, non-async event timestamps are monotonically
+    non-decreasing (Perfetto renders out-of-order slices as garbage);
+  * async begin/end ("b"/"e") events pair up per (cat, id, name);
+  * with ``--scenario migration``: the trace contains the full
+    stack-module lifecycle — migrate.transfer and migrate.finalize
+    spans, a migrate.drain begin/end pair, and park/unpark instants.
+
+Stdlib only (runs in CI before any pip install). Exit 1 with a listing
+on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+KNOWN_PHASES = {"X", "B", "E", "i", "I", "b", "e", "n", "M", "C"}
+
+# the lifecycle the migration scenario's trace must show: event name ->
+# set of phases at least one event must carry
+MIGRATION_LIFECYCLE = {
+    "migrate.transfer": {"X"},
+    "migrate.drain": {"b"},
+    "migrate.drain/end": {"e"},          # pseudo-key: see _lifecycle_key
+    "migrate.finalize": {"X"},
+    "park": {"i", "I"},
+    "unpark": {"i", "I"},
+}
+
+
+def _lifecycle_key(name: str, ph: str) -> str:
+    return f"{name}/end" if (name, ph) == ("migrate.drain", "e") else name
+
+
+def check_trace(doc, scenario=None) -> list:
+    problems = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["no traceEvents list"]
+    last_ts = {}
+    async_open = {}
+    seen = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            continue
+        name, ts = ev.get("name"), ev.get("ts")
+        if not isinstance(name, str) or not name:
+            problems.append(f"event {i}: missing name")
+        if not isinstance(ts, (int, float)):
+            problems.append(f"event {i}: non-numeric ts {ts!r}")
+            continue
+        key = _lifecycle_key(name, ph)
+        seen.setdefault(key, set()).add(ph)
+        if ph in ("b", "e"):
+            # async events live on their (cat, id) timeline, not the
+            # track's — don't hold them to per-track monotonicity
+            aid = (ev.get("cat"), ev.get("id"), name)
+            if ev.get("id") is None:
+                problems.append(f"event {i}: async {ph!r} without id")
+            if ph == "b":
+                async_open[aid] = async_open.get(aid, 0) + 1
+            else:
+                if async_open.get(aid, 0) <= 0:
+                    problems.append(
+                        f"event {i}: async end without begin for {aid}")
+                else:
+                    async_open[aid] -= 1
+            continue
+        track = (ev.get("pid"), ev.get("tid"))
+        if ts < last_ts.get(track, float("-inf")):
+            problems.append(
+                f"event {i} ({name}): ts {ts} goes backwards on track "
+                f"{track} (last {last_ts[track]})")
+        # an X span occupies [ts, ts+dur]; later events must not start
+        # before it ended on the same track or the slices overlap
+        end = ts + ev.get("dur", 0) if ph == "X" else ts
+        last_ts[track] = max(last_ts.get(track, float("-inf")), end)
+    for aid, n in async_open.items():
+        if n > 0:
+            problems.append(f"async begin without end for {aid}")
+    if scenario == "migration":
+        for key, phases in MIGRATION_LIFECYCLE.items():
+            name = key.split("/", 1)[0]
+            if not (seen.get(key, set()) & phases):
+                problems.append(
+                    f"migration lifecycle incomplete: no "
+                    f"{sorted(phases)} event named {name!r}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate a Chrome trace-event JSON trace")
+    ap.add_argument("trace", type=pathlib.Path)
+    ap.add_argument("--scenario", default=None,
+                    help="also require this scenario's lifecycle events "
+                         "(supported: migration)")
+    args = ap.parse_args(argv)
+    try:
+        doc = json.loads(args.trace.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable trace: {e}")
+        return 1
+    problems = check_trace(doc, scenario=args.scenario)
+    if problems:
+        print(f"{args.trace}: trace invalid:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n = sum(1 for e in doc["traceEvents"]
+            if isinstance(e, dict) and e.get("ph") != "M")
+    print(f"{args.trace}: ok ({n} events"
+          + (f", {args.scenario} lifecycle complete" if args.scenario
+             else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""One-screen fabric snapshot rendered from a Prometheus scrape alone.
+
+    PYTHONPATH=src python tools/nk_top.py SCRAPE.txt
+    PYTHONPATH=src:. python tools/nk_top.py --demo
+
+Reads one text-format export (the output of any ``export_prometheus()``
+or a ``MetricsRegistry`` collecting several), parses it with the strict
+scrape-side parser, and renders what an operator wants at a glance:
+
+  * the fabric summary — engines up/parked, steps, migrations in flight
+    and completed, average cores saved by the autopilot;
+  * a per-engine table — load, decode steps, parked state;
+  * a per-tenant table — current engine, admit-wait p50/p99 estimated
+    from the exported histogram buckets (same upper-edge rule as
+    ``repro.obs.hist.Histogram.quantile``);
+  * the recent live migrations from ``nk_migration_info`` series.
+
+Everything is derived from the scrape text: no handle on the live
+cluster, no side channel. ``--demo`` builds the test suite's jit-free
+fake cluster, drives a migration, exports through a MetricsRegistry,
+and renders that — a self-contained smoke test of the whole path.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def _fmt(v, unit=""):
+    if v is None:
+        return "-"
+    if math.isnan(v):
+        return "NaN"
+    if unit == "s":
+        return f"{v * 1e3:.1f}ms" if v < 1.0 else f"{v:.2f}s"
+    if abs(v) >= 1e9:
+        return f"{v / 1e9:.2f}G{unit}"
+    if abs(v) >= 1e6:
+        return f"{v / 1e6:.2f}M{unit}"
+    if v == int(v):
+        return f"{int(v)}{unit}"
+    return f"{v:.3g}{unit}"
+
+
+class Scrape:
+    """Indexed view over parsed (name, labels) -> value series."""
+
+    def __init__(self, series):
+        self.series = series
+
+    def value(self, name, **labels):
+        want = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        for (n, lbl), v in self.series.items():
+            if n == name and tuple(sorted(lbl)) == want:
+                return v
+        return None
+
+    def by_label(self, name, label):
+        """All series of ``name`` keyed by one label's value."""
+        out = {}
+        for (n, lbl), v in self.series.items():
+            d = dict(lbl)
+            if n == name and label in d:
+                out[d[label]] = v
+        return out
+
+    def label_values(self, name, label):
+        return sorted(self.by_label(name, label),
+                      key=lambda s: (len(s), s))
+
+    def hist_quantile(self, family, q, **labels):
+        """Quantile from cumulative ``_bucket`` series (upper edge)."""
+        want = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        buckets = []
+        for (n, lbl), v in self.series.items():
+            if n != family + "_bucket":
+                continue
+            d = dict(lbl)
+            le = d.pop("le", None)
+            if le is None or tuple(sorted(d.items())) != want:
+                continue
+            edge = float("inf") if le == "+Inf" else float(le)
+            buckets.append((edge, v))
+        if not buckets:
+            return None
+        buckets.sort()
+        total = buckets[-1][1]
+        if total <= 0:
+            return None
+        rank = max(1, math.ceil(q * total))
+        for edge, cum in buckets:
+            if cum >= rank:
+                return edge
+        return buckets[-1][0]
+
+
+def _table(rows, headers):
+    rows = [headers] + [[str(c) for c in r] for r in rows]
+    widths = [max(len(r[i]) for r in rows) for i in range(len(headers))]
+    out = []
+    for j, r in enumerate(rows):
+        out.append("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+        if j == 0:
+            out.append("  ".join("-" * w for w in widths))
+    return "\n".join(out)
+
+
+def render(scrape: Scrape) -> str:
+    s = scrape
+    lines = []
+
+    engines = s.value("nk_cluster_engines")
+    parked = s.value("nk_cluster_parked")
+    steps = s.value("nk_cluster_steps_total")
+    draining = s.value("nk_migrations_draining")
+    done = s.value("nk_migrations_completed_total")
+    saved = s.value("nk_cores_saved")
+    head = ["nk_top — fabric snapshot"]
+    if engines is not None:
+        head.append(f"engines {_fmt(engines)} ({_fmt(parked or 0)} parked)")
+    if steps is not None:
+        head.append(f"steps {_fmt(steps)}")
+    if done is not None or draining is not None:
+        head.append(f"migrations {_fmt(done or 0)} done"
+                    f" / {_fmt(draining or 0)} draining")
+    if saved is not None:
+        head.append(f"cores saved {saved:.2f}")
+    lines.append("  |  ".join(head))
+    lines.append("")
+
+    loads = s.by_label("nk_engine_load", "engine")
+    if loads:
+        parked_by = s.by_label("nk_engine_parked", "engine")
+        steps_by = s.by_label("nk_engine_decode_steps_total", "engine")
+        rows = [[k, _fmt(loads.get(k)), _fmt(steps_by.get(k)),
+                 "parked" if parked_by.get(k) else "up"]
+                for k in s.label_values("nk_engine_load", "engine")]
+        lines.append(_table(rows, ["engine", "load", "decode_steps",
+                                   "state"]))
+        lines.append("")
+
+    placement = s.by_label("nk_placement", "tenant")
+    wait_tenants = s.label_values("nk_admit_wait_seconds_count", "tenant")
+    tenants = sorted(set(placement) | set(wait_tenants),
+                     key=lambda t: (len(t), t))
+    if tenants:
+        rows = []
+        for t in tenants:
+            eng = placement.get(t)
+            n = s.value("nk_admit_wait_seconds_count", tenant=t)
+            rows.append([
+                t,
+                _fmt(eng) if eng is not None else "-",
+                _fmt(n or 0),
+                _fmt(s.hist_quantile("nk_admit_wait_seconds", 0.50,
+                                     tenant=t), "s"),
+                _fmt(s.hist_quantile("nk_admit_wait_seconds", 0.99,
+                                     tenant=t), "s"),
+                _fmt(s.hist_quantile("nk_ttft_seconds", 0.99,
+                                     tenant=t), "s"),
+                _fmt(s.hist_quantile("nk_e2e_seconds", 0.99,
+                                     tenant=t), "s"),
+            ])
+        lines.append(_table(rows, ["tenant", "engine", "admits",
+                                   "wait_p50", "wait_p99", "ttft_p99",
+                                   "e2e_p99"]))
+        lines.append("")
+
+    moves = []
+    for (n, lbl), v in s.series.items():
+        if n == "nk_migration_info":
+            d = dict(lbl)
+            moves.append((float(d.get("seq", v)), d))
+    if moves:
+        moves.sort(key=lambda m: m[0])
+        rows = [[_fmt(seq), d.get("tenant", "?"),
+                 f"{d.get('src', '?')} -> {d.get('dst', '?')}"]
+                for seq, d in moves]
+        lines.append(_table(rows, ["step", "tenant", "move"]))
+        lines.append("")
+
+    if len(lines) <= 2:
+        lines.append("(no fabric series in scrape — is this a cluster "
+                     "export?)")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def demo_scrape() -> str:
+    """Drive the jit-free fake cluster and export via a registry."""
+    from repro.control.placement import PlacementController
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serve.scheduler import Request
+    from tests.test_placement import make_fake_cluster
+
+    cluster = make_fake_cluster(3)
+    for t in range(4):
+        cluster.add_tenant(t)
+        for r in range(3):
+            cluster.submit(Request(t, [1, 2], 4, req_id=10 * t + r,
+                                   arrival=0.1 * r))
+    for i in range(8):
+        cluster.step(now=0.1 * (i + 1))
+    cluster.migrate(0, (cluster.placement[0] + 1) % 3, now=1.0)
+    for i in range(8):
+        cluster.step(now=1.0 + 0.1 * (i + 1))
+    pilot = PlacementController(cluster, policy="spread_hot")
+    cluster.attach_autopilot(pilot)
+    pilot.tick(now=3.0)
+
+    reg = MetricsRegistry()
+    # the cluster folds its attached autopilot's counters into its own
+    # export, so one provider covers the whole fabric
+    reg.register_provider(cluster, name="cluster")
+    return reg.export_prometheus()
+
+
+def main(argv=None) -> int:
+    from repro.obs.metrics import parse_prometheus_text
+
+    ap = argparse.ArgumentParser(
+        description="render a fabric snapshot from a Prometheus scrape")
+    ap.add_argument("scrape", nargs="?", type=pathlib.Path,
+                    help="text-format export to render")
+    ap.add_argument("--demo", action="store_true",
+                    help="drive the fake cluster and render its export")
+    args = ap.parse_args(argv)
+    if args.demo:
+        text = demo_scrape()
+    elif args.scrape is not None:
+        try:
+            text = args.scrape.read_text()
+        except OSError as e:
+            print(f"unreadable scrape: {e}")
+            return 1
+    else:
+        ap.error("need a SCRAPE file or --demo")
+    try:
+        series = parse_prometheus_text(text)
+    except ValueError as e:
+        print(f"scrape does not parse: {e}")
+        return 1
+    sys.stdout.write(render(Scrape(series)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
