@@ -42,7 +42,10 @@ collective traffic), and zero ping-pong moves under hysteresis.
 The autopilot suite also measures claim (h) — the flight recorder's
 disabled path (null-object tracer behind ``if TRACER.enabled`` guards)
 costs < 2% of the mean decode-step time, gated in
-benchmarks/bench_thresholds.json.
+benchmarks/bench_thresholds.json — and claim (i): two live stack-module
+hot-swaps mid-burst (serve scheduler variant + bytes NSM flip) drop
+zero tokens, keep both planes' ledgers conserved, hold Jain >= 0.95,
+and bound the p99 e2e blip vs a swap-free baseline.
 
 ``--json OUT.json`` additionally writes every row, claim and verdict as a
 machine-readable document (the bench trajectory artifact CI uploads);
@@ -51,7 +54,8 @@ bench-smoke job, gated by tools/check_bench.py against
 benchmarks/bench_thresholds.json); ``--trace OUT.json`` records one
 migration-scenario replay as a Chrome trace-event JSON (validated by
 tools/check_trace.py, loadable in Perfetto) — the CI flight-recorder
-artifact.
+artifact; ``--swap-trace OUT.json`` records one stack_swap replay
+(validated by tools/check_trace.py --scenario stack_swap).
 """
 from __future__ import annotations
 
@@ -468,6 +472,74 @@ def run_e2e_hotspot(engines: int = 3,
                      f"conserved"}
 
 
+def run_e2e_stack_swap(engines: int = 3,
+                       intervals: int = E2E_INTERVALS) -> Dict:
+    """Claim (i): a live stack hot-swap under traffic drops nothing.
+
+    The adversarial window replayed twice on the same cluster shape
+    (bytes-plane CoreEngine per engine, synthetic collective traffic):
+    once untouched (the baseline), once with two live stack-module
+    swaps mid-burst — the hottest serve engine's module replaced by one
+    running the alternate scheduler policy a third of the way in, the
+    bytes-plane CoreEngine flipped to the alternate NSM stack two
+    thirds in. Gated: >= 2 swaps happened, the served-token ledger
+    still equals billed ground truth for every tenant (zero dropped /
+    double-billed tokens), both planes' conservation holds, Jain >=
+    0.95 across the swaps, and the worst per-tenant p99 e2e latency
+    blip vs the swap-free baseline stays bounded.
+    """
+    from repro.serve.replay import (
+        TraceReplayer, make_replay_cluster, scenario_spec, swap_live_stack,
+    )
+    n = E2E_TENANTS
+    trace, cap = scenario_spec("stack_swap", n_tenants=n,
+                               intervals=intervals)
+
+    def run(with_swaps):
+        cl = make_replay_cluster(capacity=cap, engines=engines,
+                                 core_plane=True)
+        pump, pumped = _byte_pump(cl)
+        events = [(i, pump) for i in range(intervals)]
+        if with_swaps:
+            serve_at = max(intervals // 3, 1)
+            bytes_at = max(2 * intervals // 3, serve_at + 1)
+            events += [
+                (serve_at,
+                 lambda c, now: swap_live_stack(c, "serve", now=now)),
+                (bytes_at,
+                 lambda c, now: swap_live_stack(c, "bytes", now=now))]
+        rep = TraceReplayer(cl, capacity=cap).run(trace, events=events)
+        return rep, cl, pumped
+
+    base, _, _ = run(False)
+    rep, cl, pumped = run(True)
+    dropped = 0.0
+    for t in range(n):
+        dropped += abs(cl.tenant_served_tokens(t)
+                       - cl.tenant_billed_ground_truth(t))
+    blip = max(max(rep.per_tenant[t].p99_e2e_s
+                   - base.per_tenant[t].p99_e2e_s, 0.0)
+               for t in range(n))
+    jain = rep.jain()
+    cons_rows, conserved = _conservation_rows("e2e_stack_swap", cl,
+                                              pumped, n)
+    quiesce_steps = sum(s.quiesce_steps for s in cl.swap_log)
+    rows = [("e2e_stack_swap,live_swaps", float(rep.swaps)),
+            ("e2e_stack_swap,jain_index", jain),
+            ("e2e_stack_swap,dropped_tokens", dropped),
+            ("e2e_stack_swap,p99_blip_s", blip),
+            ("e2e_stack_swap,quiesce_steps", float(quiesce_steps))] \
+        + cons_rows
+    ok = (rep.swaps >= 2 and jain >= 0.95 and dropped == 0.0
+          and conserved and blip <= 2.0)
+    return {"rows": rows, "ok": ok,
+            "claim": f"{rep.swaps} live stack swap(s) under the "
+                     f"adversarial burst ({quiesce_steps} quiesce "
+                     f"step(s)): 0 dropped tokens, both planes "
+                     f"conserved, Jain {jain:.3f} >= 0.95, worst p99 "
+                     f"blip {blip:.3f}s <= 2s"}
+
+
 SMOKE_INTERVALS = 12
 
 
@@ -548,14 +620,14 @@ def run_tracer_overhead(intervals: int = SMOKE_INTERVALS) -> Dict:
                      f"step (< 2%): tracing off is free"}
 
 
-AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot)
+AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot, run_e2e_stack_swap)
 
 
 def _parse_args(argv):
     opts = {"e2e": "--e2e" in argv, "smoke": "--smoke" in argv,
             "autopilot": "--autopilot" in argv, "engines": 1,
-            "json": None, "trace": None}
-    for flag in ("--engines", "--json", "--trace"):
+            "json": None, "trace": None, "swap-trace": None}
+    for flag in ("--engines", "--json", "--trace", "--swap-trace"):
         if flag in argv:
             i = argv.index(flag)
             if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
@@ -577,8 +649,9 @@ def _parse_args(argv):
     if opts["smoke"] and not opts["autopilot"]:
         raise SystemExit("--smoke runs only the autopilot claims: "
                          "add --autopilot")
-    if opts["trace"] and not opts["e2e"]:
-        raise SystemExit("--trace records the real datapath: add --e2e")
+    if (opts["trace"] or opts["swap-trace"]) and not opts["e2e"]:
+        raise SystemExit("--trace/--swap-trace record the real datapath: "
+                         "add --e2e")
     return opts
 
 
@@ -626,6 +699,16 @@ def main(argv=None) -> None:
                         intervals=max(intervals, SMOKE_INTERVALS),
                         trace_path=opts["trace"])
         print(f"wrote {opts['trace']} (migration scenario trace)",
+              file=sys.stderr)
+    if opts["swap-trace"]:
+        # the hot-swap flight-recorder artifact: one stack_swap replay
+        # (two live stack-module swaps mid-burst) — validated by
+        # tools/check_trace.py --scenario stack_swap
+        from repro.serve.replay import replay_scenario
+        replay_scenario("stack_swap", n_tenants=E2E_TENANTS,
+                        intervals=max(intervals, SMOKE_INTERVALS),
+                        trace_path=opts["swap-trace"])
+        print(f"wrote {opts['swap-trace']} (stack_swap scenario trace)",
               file=sys.stderr)
     if opts["json"]:
         doc = {"ok": failures == 0,

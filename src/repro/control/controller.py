@@ -100,6 +100,22 @@ class RateController:
             (scheduler, SchedulerTelemetry(scheduler, self.alpha)))
         return self
 
+    def detach_scheduler(self, scheduler) -> None:
+        """Remove a TenantScheduler enforcement point (live stack swap:
+        the retiring module's scheduler must stop receiving pushes).
+
+        Also forgets the delta-push history of every *scheduler* point:
+        detaching shifts the remaining schedulers' indices, so keyed
+        ``_last_push`` entries would attribute stale targets to the wrong
+        point. Unknown schedulers are ignored (idempotent)."""
+        kept = [(s, tel) for s, tel in self._schedulers
+                if s is not scheduler]
+        if len(kept) == len(self._schedulers):
+            return
+        self._schedulers[:] = kept
+        for key in [k for k in self._last_push if k[0] == "scheduler"]:
+            del self._last_push[key]
+
     def invalidate_tenant(self, tenant: int) -> None:
         """Forget delta-push history for one tenant: the next tick pushes
         its rate to *every* enforcement point regardless of ``delta_tol``.

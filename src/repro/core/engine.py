@@ -446,6 +446,17 @@ class CoreEngine(StackModule):
         with self._lock:
             return float(self.billed.get(tenant_id, 0))
 
+    def inherit_ground_truth(self, old: "CoreEngine") -> None:
+        """Adopt a retired engine's billed-bytes ground truth (hot-swap
+        only): the replacement keeps serving the same engine slot, so the
+        bytes the old stack routed must stay billed *here* or the plane's
+        summed ground truth would drop and conservation would break."""
+        with old._lock:
+            inherited = dict(old.billed)
+        with self._lock:
+            for t, b in inherited.items():
+                self.billed[t] += b
+
     def suspend(self) -> int:
         """Bytes-plane park: the switch holds no accelerator buffers, so
         suspending only trims the audit scratch (route/throttle logs).

@@ -161,6 +161,18 @@ class StackModule:
         """
         raise NotImplementedError
 
+    def inherit_ground_truth(self, old: "StackModule") -> None:
+        """Adopt a retired module's billed ground truth (hot-swap only).
+
+        A live stack swap replaces a module *in place*: the replacement
+        keeps serving the same engine slot, so the retired module's
+        never-migrates state (completed-request records, billed-bytes
+        counters) must move to the replacement or the plane's summed
+        ground truth would drop by everything the old stack ever billed
+        and the conservation assert would fire. Default: nothing to
+        inherit (a stateless plane)."""
+        return None
+
     # -- placement read surface ---------------------------------------------
     def tenant_load(self, tenant_id: int) -> TenantLoad:
         """One tenant's instantaneous pressure here (zeros for planes
@@ -257,6 +269,24 @@ class SchedulerServeModule(StackModule):
                     and s.req.tenant_id == tenant_id:
                 total += len(s.req.prompt) + len(s.req.generated)
         return float(total)
+
+    def inherit_ground_truth(self, old: "SchedulerServeModule") -> None:
+        """Adopt the retired module's completed-request records (its share
+        of the serve-plane ground truth) in order, so the cluster's
+        completed-collection cursor for this engine slot stays valid. The
+        old module must be quiesced first — in-flight slots are the OTHER
+        half of ground truth and cannot be inherited mid-generation."""
+        if old.inflight():
+            raise RuntimeError(
+                f"cannot inherit ground truth: {old.inflight()} slot(s) "
+                f"still in flight on the retiring module; quiesce first")
+        self.completed.extend(old.completed)
+        # engine-local latency tails stay attributed to this engine slot
+        # across the swap, like the completed records they describe
+        hists = self.latency_hists()
+        for fam, th in old.latency_hists().items():
+            for t, h in th.per_tenant.items():
+                hists[fam].absorb(t, h)
 
     # -- latency observability ----------------------------------------------
     def latency_hists(self) -> Dict[str, TenantHistograms]:

@@ -69,6 +69,8 @@ METRIC_HELP: Dict[str, str] = {
     "nk_migrations_completed_total": "Live tenant migrations finalized",
     "nk_migrations_draining": "Migrations currently draining on a source",
     "nk_migration_info": "Recent migration records (value = started step)",
+    "nk_swaps_total": "Live stack-module hot-swaps, labeled by plane",
+    "nk_swap_info": "Recent hot-swap records (value = cluster step)",
     "nk_cluster_parked": "Engines currently parked",
     "nk_parked_engine_steps_total": "Engine-steps skipped while parked",
     "nk_cores_saved": "Average engines parked per cluster step",

@@ -1,4 +1,6 @@
-from repro.serve.cluster import ClusterLedger, EngineCluster, MigrationRecord
+from repro.serve.cluster import (
+    ClusterLedger, EngineCluster, MigrationRecord, SwapRecord,
+)
 from repro.serve.engine import ServeEngine, Slot
 from repro.serve.multiplex import (
     TRACES, Trace, adversarial_trace, bursty_trace, chip_accounting,
@@ -8,18 +10,18 @@ from repro.serve.multiplex import (
 from repro.serve.replay import (
     CLUSTER_SCENARIOS, SCENARIOS, ReplayReport, TenantReport, TraceReplayer,
     make_replay_cluster, make_replay_engine, operator_rebalance,
-    replay_scenario, scenario_spec,
+    replay_scenario, scenario_spec, stack_swap_events, swap_live_stack,
 )
 from repro.serve.scheduler import Request, TenantScheduler
 
 __all__ = [
-    "ClusterLedger", "EngineCluster", "MigrationRecord",
+    "ClusterLedger", "EngineCluster", "MigrationRecord", "SwapRecord",
     "ServeEngine", "Slot", "TRACES", "Trace", "adversarial_trace",
     "bursty_trace", "chip_accounting", "correlated_burst_trace",
     "fair_replay", "hotspot_trace", "idle_window_trace", "jain_index",
     "paper_table2_analog", "ramp_trace", "steady_trace",
     "CLUSTER_SCENARIOS", "SCENARIOS", "ReplayReport", "TenantReport",
     "TraceReplayer", "make_replay_cluster", "make_replay_engine",
-    "operator_rebalance", "replay_scenario", "scenario_spec", "Request",
-    "TenantScheduler",
+    "operator_rebalance", "replay_scenario", "scenario_spec",
+    "stack_swap_events", "swap_live_stack", "Request", "TenantScheduler",
 ]

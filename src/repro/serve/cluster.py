@@ -56,7 +56,7 @@ from __future__ import annotations
 import time
 import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.control.telemetry import format_prometheus
 from repro.fabric import StackPlane, TenantState
@@ -82,6 +82,26 @@ class MigrationRecord:
     @property
     def finalized(self) -> bool:
         return self.finalized_step >= 0
+
+
+@dataclass
+class SwapRecord:
+    """One swap_module() call — a live stack hot-swap — for the audit log.
+
+    The paper's flagship move (kernel TCP -> mTCP under an unmodified
+    guest): the module serving one engine slot is replaced in place,
+    under traffic, with every tenant transferred across the boundary and
+    the plane's conservation ledger unchanged.
+    """
+
+    engine: int                   # engine slot swapped in place
+    plane: str                    # plane name ("serve", "bytes", ...)
+    step: int                     # cluster step count at the swap
+    tenants: Tuple[int, ...]      # tenants transferred across the boundary
+    inflight_at_swap: int         # slots quiesced before the transfer
+    quiesce_steps: int            # extra engine steps the quiesce ran
+    old_stack: str                # descriptor of the retired module
+    new_stack: str                # descriptor of the replacement
 
 
 class ClusterLedger:
@@ -228,6 +248,8 @@ class EngineCluster:
         self.migration_log: List[MigrationRecord] = []
         self.migrations_started = 0
         self.migrations_completed = 0
+        self.swap_log: List[SwapRecord] = []
+        self.swaps_total: Dict[str, int] = {}   # plane name -> swaps done
         self.completed: List[Request] = []
         self._seen_completed = [len(e.completed) for e in self.engines]
         self.steps = 0
@@ -525,6 +547,183 @@ class EngineCluster:
             self._finalize(rec, now)
         return rec
 
+    # -- live stack hot-swap (the paper's kernel-TCP -> mTCP move) ----------
+    # quiesce safety valve: a slot that never drains (a stuck decode loop)
+    # must fail loudly instead of spinning the swap forever
+    QUIESCE_STEP_CAP = 10_000
+
+    @staticmethod
+    def _stack_desc(module) -> str:
+        """Audit-log descriptor for one stack module: the class name plus
+        the knob a swap actually flips (the bytes plane swaps CoreEngine
+        for CoreEngine — only ``default_nsm`` tells them apart; serve
+        variants differ by scheduler policy)."""
+        name = type(module).__name__
+        nsm = getattr(module, "default_nsm", None)
+        if nsm is not None:
+            return f"{name}[{nsm}]"
+        policy = getattr(getattr(module, "scheduler", None), "policy", None)
+        return f"{name}[{policy}]" if policy else name
+
+    def swap_module(self, engine_id: int, plane: str,
+                    new_module_factory: Callable[[], object],
+                    *, now: Optional[float] = None) -> SwapRecord:
+        """Hot-swap the ``StackModule`` serving one engine slot, live.
+
+        The NetKernel headline demo as a cluster primitive: the operator
+        replaces the stack beneath unmodified tenants (native <->
+        ``CompressedNsm`` on the bytes plane; an alternate scheduler
+        variant on the serve plane) while traffic is running, with zero
+        dropped or double-billed tokens. Three phases, one trace span
+        each:
+
+          1. **quiesce** (``swap.quiesce`` async pair): admission pauses
+             (``scheduler.paused`` — queued work stays put, no
+             deferred-poll noise) and the old module steps until its
+             in-flight slots run dry — they finish *and bill* on the
+             stack that admitted them, exactly like a migration drain.
+          2. **transfer** (``swap.transfer`` span): every placed tenant
+             exports via ``TenantState``, its counters fold into the
+             plane's ``ConservationLedger``, the replacement is built and
+             adopts the retired module's billed ground truth
+             (``inherit_ground_truth`` — completed records / billed
+             bytes stay attributed to this engine slot), the module list
+             entry is replaced IN PLACE (the plane, the cluster and the
+             ledger share the list by reference), the controller's
+             enforcement point is re-wired, and every tenant re-imports.
+          3. **resume** (``swap.resume`` instant): admission reopens on
+             the new module; ``invalidate_tenant`` forces the delta-push
+             controller to re-push fresh rates to every enforcement
+             point next tick, so no stale rate survives the swap.
+
+        Ledger continuity AND ground-truth continuity are asserted per
+        tenant across the boundary, then the full conservation invariant.
+        Refused while the engine is parked or is the draining source of a
+        live migration (the residual billing would be stranded on the
+        retired module — same contract as mid-drain re-migration).
+        Returns the ``SwapRecord``.
+        """
+        k = int(engine_id)
+        if not 0 <= k < len(self.engines):
+            raise IndexError(f"engine {k} not in cluster")
+        pl = next((p for p in self.planes if p.name == plane), None)
+        if pl is None:
+            raise KeyError(
+                f"plane {plane!r} is not attached to this cluster "
+                f"(have: {[p.name for p in self.planes]})")
+        if k in self.parked:
+            raise ValueError(
+                f"engine {k} is parked; unpark it before swapping its "
+                f"{plane} module")
+        if any(src == k for src in self.draining.values()):
+            raise RuntimeError(
+                f"engine {k} is the draining source of a live migration; "
+                f"a swap would strand the residual billing on the retired "
+                f"module — wait for the drain to finalize")
+        old = pl.modules[k]
+        tenants = tuple(sorted(
+            t for t, e in self.placement.items()
+            if e == k and old.has_tenant(t)))
+        ts0 = self._trace_ts(now)
+        quiesce_id = f"{pl.name}:{k}:{self.steps}"
+        if tracing.TRACER.enabled:
+            tracing.TRACER.async_begin("cluster", "swap.quiesce",
+                                       quiesce_id, ts0, engine=k,
+                                       plane=pl.name)
+        # 1. quiesce: pause admission, drain in-flight slots on the old
+        # module (planes without slot machinery skip straight through)
+        sched = getattr(old, "scheduler", None)
+        inflight_fn = getattr(old, "inflight", None)
+        inflight0 = int(inflight_fn()) if callable(inflight_fn) else 0
+        quiesce_steps = 0
+        if sched is not None:
+            sched.paused = True
+        try:
+            while callable(inflight_fn) and inflight_fn():
+                if quiesce_steps >= self.QUIESCE_STEP_CAP:
+                    raise RuntimeError(
+                        f"engine {k} failed to quiesce within "
+                        f"{self.QUIESCE_STEP_CAP} steps "
+                        f"({inflight_fn()} slot(s) still in flight)")
+                old.step(now=now)
+                quiesce_steps += 1
+        finally:
+            if sched is not None:
+                sched.paused = False
+        ts1 = self._trace_ts(now)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.async_end("cluster", "swap.quiesce",
+                                     quiesce_id, ts1, engine=k,
+                                     plane=pl.name)
+        # 2. transfer: totals are taken AFTER the quiesce (drain billing
+        # moved them) and must be unchanged by everything below
+        totals_before = {t: pl.ledger.total(t) for t in tenants}
+        truth_before = {t: pl.ledger.ground_truth(t) for t in tenants}
+        states: Dict[int, TenantState] = {}
+        for t in tenants:
+            state = old.export_tenant(t, now)
+            pl.ledger.fold(t, old, state)
+            states[t] = state
+        new = new_module_factory()
+        if getattr(new, "plane", pl.name) != pl.name:
+            raise ValueError(
+                f"replacement module is {getattr(new, 'plane')!r}-plane; "
+                f"cannot swap it into the {pl.name} plane")
+        if getattr(new, "controller", None) is not None:
+            raise ValueError(
+                "replacement module must not own a controller; the "
+                "cluster ticks the shared one")
+        # the replacement takes over the slot's identity: trace track and
+        # the retired module's never-migrates ground truth
+        if hasattr(new, "trace_name"):
+            new.trace_name = f"engine{k}"
+        new_sched = getattr(new, "scheduler", None)
+        if new_sched is not None:
+            new_sched.trace_track = f"engine{k}"
+        new.inherit_ground_truth(old)
+        pl.modules[k] = new    # in place: engines/planes/ledger all see it
+        if pl is self.serve_plane and self.controller is not None:
+            if sched is not None:
+                self.controller.detach_scheduler(sched)
+            if new_sched is not None:
+                self.controller.attach_scheduler(new_sched)
+        for t in tenants:
+            new.import_tenant(t, states[t], now)
+        # 3. resume: fresh rates to every enforcement point next tick
+        if self.controller is not None:
+            for t in tenants:
+                self.controller.invalidate_tenant(t)
+        for t in tenants:
+            after = pl.ledger.total(t)
+            if int(round(after)) != int(round(totals_before[t])):
+                raise AssertionError(
+                    f"{pl.name}-plane swap broke tenant {t}'s ledger "
+                    f"continuity: {totals_before[t]} -> {after} "
+                    f"{pl.ledger.conserved}")
+            truth_after = pl.ledger.ground_truth(t)
+            if int(round(truth_after)) != int(round(truth_before[t])):
+                raise AssertionError(
+                    f"{pl.name}-plane swap lost tenant {t}'s billed "
+                    f"ground truth across the boundary: "
+                    f"{truth_before[t]} -> {truth_after}")
+            self.assert_ledger_conservation(t)
+        ts2 = self._trace_ts(now)
+        rec = SwapRecord(
+            engine=k, plane=pl.name, step=self.steps, tenants=tenants,
+            inflight_at_swap=inflight0, quiesce_steps=quiesce_steps,
+            old_stack=self._stack_desc(old),
+            new_stack=self._stack_desc(new))
+        self.swap_log.append(rec)
+        self.swaps_total[pl.name] = self.swaps_total.get(pl.name, 0) + 1
+        if tracing.TRACER.enabled:
+            tracing.TRACER.span(
+                "cluster", "swap.transfer", ts1, ts2, engine=k,
+                plane=pl.name, tenants=len(tenants),
+                old=rec.old_stack, new=rec.new_stack)
+            tracing.TRACER.instant("cluster", "swap.resume", ts2,
+                                   engine=k, plane=pl.name)
+        return rec
+
     def rebalance(self, *, tenant: Optional[int] = None,
                   now: Optional[float] = None) -> Optional[MigrationRecord]:
         """Operator one-shot: move a tenant off the hottest engine onto the
@@ -712,6 +911,15 @@ class EngineCluster:
             out[f'nk_migration_info{{seq="{rec.started_step}",'
                 f'tenant="{rec.tenant}",src="{rec.src}",'
                 f'dst="{rec.dst}"}}'] = float(rec.started_step)
+        for plane_name, n in sorted(self.swaps_total.items()):
+            out[f'nk_swaps_total{{plane="{plane_name}"}}'] = float(n)
+        # recent hot-swaps as info series (value = cluster step), like
+        # nk_migration_info above
+        for srec in self.swap_log[-5:]:
+            out[f'nk_swap_info{{seq="{srec.step}",'
+                f'engine="{srec.engine}",plane="{srec.plane}",'
+                f'old="{srec.old_stack}",new="{srec.new_stack}"}}'] = \
+                float(srec.step)
         for th in self.latency().values():
             out.update(th.counters())
         if self.autopilot is not None and \

@@ -95,6 +95,7 @@ class ReplayReport:
     push_skipped: int = 0
     engines: int = 1
     migrations: int = 0
+    swaps: int = 0                # live stack hot-swaps inside this window
     placement: Optional[Dict[int, int]] = None
     cores_saved: float = 0.0      # avg engines parked per cluster step
     max_parked: int = 0           # peak engines asleep at once
@@ -229,6 +230,7 @@ class TraceReplayer:
         skip0 = getattr(ctrl, "push_skipped", 0)
         steps0 = self.engine.decode_steps
         migrations0 = getattr(self.engine, "migrations_completed", 0)
+        swaps0 = len(getattr(self.engine, "swap_log", ()))
         cl_steps0 = getattr(self.engine, "steps", 0)
         parked0 = getattr(self.engine, "parked_engine_steps", 0)
         mem0 = getattr(self.engine, "mem_saved_byte_steps", 0)
@@ -331,6 +333,7 @@ class TraceReplayer:
             engines=len(getattr(self.engine, "engines", ())) or 1,
             migrations=getattr(self.engine, "migrations_completed", 0)
             - migrations0,
+            swaps=len(getattr(self.engine, "swap_log", ())) - swaps0,
             placement=dict(placement) if placement is not None else None,
             cores_saved=parked_steps / cl_steps if cl_steps else 0.0,
             max_parked=max_parked,
@@ -441,14 +444,15 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
 # every name scenario_spec accepts (trace vocabulary + the cluster-only
 # scenarios layered on top of it)
 SCENARIOS = ("steady", "adversarial", "migration", "correlated", "ramp",
-             "bursty", "consolidation", "hotspot")
+             "bursty", "consolidation", "hotspot", "stack_swap")
 
 # scenarios that need an EngineCluster (engines >= 2) to mean anything,
 # with the autopilot policy each one runs by default (None = operator-
 # driven: the migration scenario fires a one-shot operator_rebalance
-# event — plan_once(force=True) — instead)
+# event — plan_once(force=True) — and the stack_swap scenario fires two
+# live swap_module events, one per plane — instead)
 CLUSTER_SCENARIOS = {"migration": None, "consolidation": "consolidate",
-                     "hotspot": "spread_hot"}
+                     "hotspot": "spread_hot", "stack_swap": None}
 
 
 def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
@@ -468,11 +472,13 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
         trace = mx.steady_trace(n_tenants, intervals, rps=3.0)
         demand = 3.0 * per_req * n_tenants
         cap = capacity or demand * 0.7            # mild, stable contention
-    elif name in ("adversarial", "migration"):
-        # one spec, two drivers: "migration" is the same adversarial fleet
-        # but on a multi-engine cluster, with a mid-window rebalance (a
-        # live migration the Jain/isolation bounds must survive) — sharing
-        # the branch keeps its hog-free baseline comparable by design
+    elif name in ("adversarial", "migration", "stack_swap"):
+        # one spec, three drivers: "migration" is the same adversarial
+        # fleet but on a multi-engine cluster, with a mid-window rebalance
+        # (a live migration the Jain/isolation bounds must survive), and
+        # "stack_swap" hot-swaps a serve and a bytes stack module
+        # mid-burst — sharing the branch keeps the hog-free baseline
+        # comparable by design
         trace = mx.adversarial_trace(n_tenants, intervals, base=1.0,
                                      hog_factor=10.0)
         cap = capacity or 1.0 * per_req * (n_tenants + 3)
@@ -580,6 +586,101 @@ def migration_events(intervals: int):
     return events
 
 
+def swap_live_stack(cluster, plane: str, *, engine=None, now=None):
+    """One live stack hot-swap, as a replay operator event — the paper's
+    kernel-TCP -> mTCP move under traffic.
+
+    On the **serve** plane the hottest engine's module is replaced by a
+    variant running the OTHER scheduler policy (wfq <-> rr), sharing the
+    retired module's weights and compiled prefill/decode (a swap costs
+    zero recompiles). On the **bytes** plane the same engine slot's
+    ``CoreEngine`` flips its default transport between the native ``xla``
+    stack and the int8 ``compressed`` one. ``engine`` pins the slot.
+    Returns the ``SwapRecord``.
+    """
+    from repro.core.engine import CoreEngine
+
+    if plane == "serve":
+        k = cluster.hottest_engine() if engine is None else int(engine)
+        old = cluster.engines[k]
+        policy = "rr" if old.scheduler.policy == "wfq" else "wfq"
+        if hasattr(old, "cfg"):                # a real jitted ServeEngine
+            from repro.serve.engine import ServeEngine
+
+            def factory():
+                sched = TenantScheduler(
+                    policy=policy,
+                    charge_prompt=old.scheduler.charge_prompt)
+                eng = ServeEngine(old.cfg, old.rcfg, old.mesh,
+                                  params=old.params, batch_slots=old.B,
+                                  max_seq=old.max_seq, scheduler=sched,
+                                  controller=None)
+                # same config and cache shapes: the replacement reuses the
+                # retired stack's jitted prefill/decode — a live swap
+                # never pays a compile
+                eng._prefill, eng._decode = old._prefill, old._decode
+                return eng
+        else:                                  # a jit-free test double
+            def factory():
+                eng = type(old)(batch_slots=old.B)
+                eng.scheduler = TenantScheduler(
+                    policy=policy,
+                    charge_prompt=old.scheduler.charge_prompt)
+                return eng
+    elif plane == "bytes":
+        cores = getattr(cluster, "core_engines", None)
+        if not cores:
+            raise KeyError("the cluster has no bytes plane attached; "
+                           "build it with core_plane=True")
+        # swap beneath the hottest serve engine's paired core: placement
+        # routes that slot the most collective traffic too
+        k = cluster.hottest_engine() if engine is None else int(engine)
+        old = cores[k]
+        nsm = "compressed" if old.default_nsm != "compressed" else "xla"
+
+        def factory():
+            return CoreEngine(mesh=old.mesh, default_nsm=nsm,
+                              enforcement=old.enforcement)
+    else:
+        raise KeyError(f"unknown plane {plane!r}; have 'serve'/'bytes'")
+    return cluster.swap_module(k, plane, factory, now=now)
+
+
+def _byte_pump_event(cluster, now=None, *, size_bytes: int = 4096):
+    """Per-interval bytes-plane traffic for the stack_swap scenario: one
+    collective op per placed tenant, routed through its engine's paired
+    core — so the bytes-plane swap happens under real traffic and its
+    conservation assert is non-trivial."""
+    from repro.core.nqe import CommOp
+
+    cores = getattr(cluster, "core_engines", None)
+    if not cores:
+        return
+    t_now = 0.0 if now is None else float(now)
+    for t, k in sorted(cluster.placement.items()):
+        op = CommOp(verb="psum", axes=("pod",), tenant_id=t,
+                    size_bytes=size_bytes)
+        cores[k].admit(op, t_now)
+        cores[k].route(op)
+
+
+def stack_swap_events(intervals: int):
+    """The stack_swap scenario's operator script: collective traffic every
+    interval, a live serve-plane swap a third of the way in (mid-burst,
+    on the hottest engine), and a bytes-plane swap (native xla ->
+    compressed int8 transport) two thirds in."""
+    serve_at = max(intervals // 3, 1)
+    bytes_at = max(2 * intervals // 3, serve_at + 1)
+    events = [(i, _byte_pump_event) for i in range(intervals)]
+    events += [
+        (serve_at, lambda cl, now=None: swap_live_stack(cl, "serve",
+                                                        now=now)),
+        (bytes_at, lambda cl, now=None: swap_live_stack(cl, "bytes",
+                                                        now=now)),
+    ]
+    return events
+
+
 # row index of the misbehaver in the adversarial trace (multiplex's default)
 ADVERSARIAL_HOG = -1
 
@@ -605,7 +706,11 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     otherwise). The ``migration`` scenario requires a cluster: mid-window
     the operator rebalances the hottest engine, and near the end a
     maintenance window drains, parks and unparks the coolest one — one
-    replay exercises the whole stack-module lifecycle.
+    replay exercises the whole stack-module lifecycle. The ``stack_swap``
+    scenario hot-swaps live stack modules mid-burst (a serve-plane
+    scheduler variant a third of the way in, a bytes-plane native ->
+    compressed transport two thirds in) with collective traffic pumped
+    every interval; it forces ``core_plane=True``.
 
     ``autopilot`` closes the placement loop on the cluster (policy name or
     a ``PlacementController``); the ``consolidation`` and ``hotspot``
@@ -629,6 +734,10 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                          f"pass engines >= 2 (or an EngineCluster)")
     if autopilot is None:
         autopilot = CLUSTER_SCENARIOS.get(name)
+    if name == "stack_swap":
+        # the scenario swaps one module per plane, so the bytes plane must
+        # exist (and carry traffic — see stack_swap_events' byte pump)
+        core_plane = True
     trace, cap = scenario_spec(name, n_tenants=n_tenants,
                                intervals=intervals, capacity=capacity,
                                seed=seed)
@@ -653,6 +762,8 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     events = None
     if name == "migration":
         events = migration_events(intervals)
+    elif name == "stack_swap":
+        events = stack_swap_events(intervals)
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
     if trace_path is None:
         return rep.run(trace, events=events)

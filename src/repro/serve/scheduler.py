@@ -64,6 +64,11 @@ class TenantScheduler:
         # trace track this scheduler's admission events land on; the
         # owning engine/cluster renames it ("engine0", ...)
         self.trace_track = "scheduler"
+        # quiesce gate for live stack swaps: while True, next_request
+        # admits nothing (and doesn't scan — no deferred_polls noise in
+        # the ledger), queued work stays put, in-flight slots keep
+        # stepping until they drain on the old module
+        self.paused = False
         self._rr = itertools.count()
         self._rr_order: List[int] = []
 
@@ -143,6 +148,32 @@ class TenantScheduler:
             self._rr_order.remove(tenant_id)
 
     # -- migration ----------------------------------------------------------
+    def _live_state(self, tenant_id: int) -> List[str]:
+        """Names of the live serve-plane state a tenant holds here (empty
+        = quiesced destination).
+
+        Deliberately does NOT include ``buckets``: controllers push
+        rate-only buckets to every enforcement point (``set_rate``), so a
+        pushed rate must not make a destination look live. But any
+        counter a ``ConservationLedger.fold`` already carried
+        (``served_tokens`` & co.) MUST: a freshly constructed replacement
+        module whose counters were pre-seeded from the retiring module
+        (e.g. via ``account`` replay) would otherwise pass the old
+        queue-only guard, and the next export would fold those counters a
+        second time — the double-fold / counter-replay edge the hot-swap
+        path exercises.
+        """
+        live = []
+        if tenant_id in self.queues:
+            live.append("queue")
+        for fld in ("served_tokens", "admitted_requests", "deferred_polls",
+                    "admit_wait_sum", "vtime"):
+            if getattr(self, fld).get(tenant_id):
+                live.append(fld)
+        if tenant_id in self.admit_wait_hist.per_tenant:
+            live.append("admit_wait_hist")
+        return live
+
     def export_tenant(self, tenant_id: int,
                       now: Optional[float] = None) -> TenantState:
         """Atomically remove a tenant and return its transferable state.
@@ -200,9 +231,12 @@ class TenantScheduler:
             raise ValueError(
                 f"cannot import a {state.plane!r}-plane TenantState into "
                 f"the serve plane")
-        if tenant_id in self.queues:
-            raise ValueError(f"tenant {tenant_id} is already active here; "
-                             f"migration requires a quiesced destination")
+        live = self._live_state(tenant_id)
+        if live:
+            raise ValueError(
+                f"tenant {tenant_id} has live serve-plane state on the "
+                f"destination ({', '.join(live)}); migration requires a "
+                f"quiesced destination")
         self.add_tenant(tenant_id,
                         weight=state.payload.get("weight", 1.0))
         self.queues[tenant_id].extend(state.payload.get("queue", ()))
@@ -258,7 +292,10 @@ class TenantScheduler:
         return ok
 
     def next_request(self, now: Optional[float] = None) -> Optional[Request]:
-        """Pick the next request to admit (or None)."""
+        """Pick the next request to admit (or None; always None while
+        ``paused`` — the hot-swap quiesce window)."""
+        if self.paused:
+            return None
         cands = [t for t in self.queues if self._admissible(t, now)]
         if not cands:
             return None

@@ -1,0 +1,110 @@
+"""Swap-conformance: the NSM conformance matrix re-run across a live swap.
+
+The paper's hot-swap claim (kernel TCP -> mTCP under an unmodified guest)
+is only real if the swapped-in stack is *numerically* the stack the
+conformance suite certified — swapping must not perturb the wire
+protocol. This suite re-runs every registry-discovered conformance case
+(same matrix, same EF-residual-derived tolerances as
+test_nsm_conformance) with the twist that the target stack arrives via
+``EngineCluster.swap_module`` mid-stream: a native (XLA) CoreEngine
+routes traffic first, the live swap replaces it under the tenant, and
+the case's verb then executes through the swapped-in engine's routing.
+
+Per case we also pin the bytes-plane ledger across the swap: the bytes
+billed pre-swap are carried (fold -> inherit_ground_truth -> import),
+post-swap traffic lands on the new module, and carried + live equals
+billed ground truth exactly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_nsm_conformance import (
+    CASES, _compressed_atol, _ref, _run, _tol, _x,
+)
+from test_placement import FakeEngine
+
+from repro.core.engine import CoreEngine
+from repro.core.nqe import CommOp, payload_bytes
+from repro.core.nsm import available_nsms, get_nsm
+from repro.serve.cluster import EngineCluster
+
+PRE_OPS = 3          # ops routed through the native stack before the swap
+OP_BYTES = 2048
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 2, pod=2)
+
+
+def _swap_cluster(mesh):
+    """One-engine cluster whose bytes plane starts on the native stack."""
+    core = CoreEngine(mesh=mesh, default_nsm="xla", enforcement="account")
+    cl = EngineCluster([FakeEngine()], core_engines=[core])
+    cl.add_tenant(0, engine=0)
+    return cl
+
+
+def _route(engine, verb, axes, size_bytes=OP_BYTES, now=0.0):
+    op = CommOp(verb=verb, axes=tuple(axes), tenant_id=0,
+                size_bytes=size_bytes)
+    engine.admit(op, now)
+    return engine.route(op)
+
+
+@pytest.mark.parametrize(
+    "name,verb,axes,dtype", CASES,
+    ids=[f"{n}-{v}-{'+'.join(a)}-{jnp.dtype(d).name}"
+         for n, v, a, d in CASES])
+def test_swapped_in_stack_matches_xla(mesh, name, verb, axes, dtype):
+    cl = _swap_cluster(mesh)
+    old = cl.core_engines[0]
+    for _ in range(PRE_OPS):
+        _route(old, verb, axes)
+    billed_pre = old.billed_ground_truth(0)
+    assert billed_pre == PRE_OPS * OP_BYTES
+
+    rec = cl.swap_module(
+        0, "bytes",
+        lambda: CoreEngine(mesh=mesh, default_nsm=name,
+                           enforcement="account"))
+    new = cl.core_engines[0]
+    assert new is not old and new.default_nsm == name
+    assert rec.old_stack != rec.new_stack
+    # pre-swap bytes survived the swap (fold + inherit_ground_truth)
+    assert new.billed_ground_truth(0) == billed_pre
+
+    # the case's verb, executed through the swapped-in engine's routing
+    x = _x(dtype)
+    nsm = _route(new, verb, axes, size_bytes=payload_bytes(x))
+    assert nsm is get_nsm(name)
+    out = _run(mesh, nsm, verb, axes, x)
+    ref = _ref(mesh, verb, axes, dtype, x)
+
+    # same tolerance ladder as the native conformance suite
+    if name == "compressed":
+        atol = _compressed_atol(mesh, verb, axes, dtype, x, ref)
+        if atol is not None:
+            np.testing.assert_allclose(out, ref, rtol=0.0, atol=atol)
+            _assert_bytes_conserved(cl, billed_pre, payload_bytes(x))
+            return
+    tol = _tol(name, dtype)
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * float(np.abs(ref).max()))
+    _assert_bytes_conserved(cl, billed_pre, payload_bytes(x))
+
+
+def _assert_bytes_conserved(cl, billed_pre, post_bytes):
+    plane = next(p for p in cl.planes if p.name == "bytes")
+    plane.ledger.assert_conservation(0, plane="bytes")
+    assert cl.tenant_core_bytes(0) == billed_pre + post_bytes
+    assert cl.tenant_core_bytes(0) == \
+        cl.core_engines[0].billed_ground_truth(0)
+
+
+def test_swap_matrix_covers_every_registered_stack():
+    """The swap suite is only exhaustive if it tracks the registry: every
+    non-native NSM must appear in the swapped-in-case matrix."""
+    assert {n for n, _, _, _ in CASES} == set(available_nsms()) - {"xla"}

@@ -1,0 +1,323 @@
+"""Live hot-swap properties (hypothesis, shimmed) + the satellite fixes.
+
+Mirrors ``tests/test_core_migration_properties.py`` for the swap path:
+where that file pins export/fold/import round trips, this one pins
+``EngineCluster.swap_module`` — the paper's kernel-TCP -> mTCP move as a
+cluster primitive — under fuzzed timing:
+
+  * a serve-plane swap at an ARBITRARY point in a submit/step sequence
+    preserves the carried + live == billed-ground-truth invariant at
+    every step, carries each tenant's bucket level/rate/capacity
+    bit-for-bit, and drops zero tokens end to end;
+  * same for a bytes-plane swap at an arbitrary point in an op stream;
+  * swap timing fuzzed against in-flight slots: the quiesce drains
+    exactly what was in flight, on the retiring stack, before the
+    transfer — and a swap is refused while the engine is the draining
+    source of a live migration;
+  * the quiesced-destination guard regression (the double-fold edge): a
+    freshly built replacement that adopted the retired module's billed
+    ground truth via ``inherit_ground_truth`` must still pass the
+    guard (ground truth is engine-slot history, not live tenant state),
+    while a destination with pre-seeded live counters is refused BY
+    NAME;
+  * the stack_swap scenario's trace passes tools/check_trace.py's
+    swap-lifecycle rule, and the rule is not vacuous (an injected
+    dispatch inside the quiesce window fails it).
+
+Runs under real hypothesis when installed, the deterministic fallback of
+``tests/_hyp.py`` otherwise.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+from _hyp import given, settings, st
+from test_placement import FakeEngine, _req, make_fake_cluster
+
+from repro.core.nqe import CommOp
+from repro.obs.tracing import trace_to
+from repro.serve.replay import (
+    TraceReplayer, scenario_spec, stack_swap_events, swap_live_stack,
+)
+
+_CHECK_TRACE = pathlib.Path(__file__).resolve().parents[1] \
+    / "tools" / "check_trace.py"
+_spec = importlib.util.spec_from_file_location("check_trace", _CHECK_TRACE)
+check_trace_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace_mod)
+
+_RATES = st.floats(min_value=100.0, max_value=1e4)
+_CAPS = st.floats(min_value=10.0, max_value=1e5)
+_TOKENS = st.integers(min_value=1, max_value=6)
+_SIZES = st.integers(min_value=1, max_value=1 << 16)
+# one fuzzed run: a sequence of (tenant, max_new_tokens) submissions,
+# stepped once each, with the swap injected at an arbitrary index
+_SUBMITS = st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              _TOKENS),
+                    min_size=1, max_size=10)
+_SWAP_AT = st.integers(min_value=0, max_value=9)
+
+# FakeEngine billing (mirrors ServeEngine): admit bills prompt(2) + first
+# token, each decode step bills 1 — a request costs max_new_tokens + 2
+_REQ_COST = 2
+
+
+@settings(max_examples=25)
+@given(submits=_SUBMITS, swap_at=_SWAP_AT, rate=_RATES)
+def test_serve_swap_at_arbitrary_point_preserves_everything(submits,
+                                                            swap_at, rate):
+    """Wherever the swap lands in the submit/step stream: conservation at
+    every step, the bucket travels exactly, and zero tokens drop."""
+    cl = make_fake_cluster(2)
+    for t in range(3):
+        cl.add_tenant(t, engine=0)
+    cl.engines[0].scheduler.set_rate(0, rate, None, 0.0)
+    old_policy = cl.engines[0].scheduler.policy
+    expected = {t: 0 for t in range(3)}
+    rec = None
+    swap_at = min(swap_at, len(submits) - 1)
+    for i, (t, tokens) in enumerate(submits):
+        now = float(i)
+        if i == swap_at:
+            b = cl.engines[0].scheduler.buckets[0]
+            before = (b.rate, b.capacity, b.snapshot(now=now)["tokens"])
+            rec = swap_live_stack(cl, "serve", engine=0, now=now)
+            nb = cl.engines[0].scheduler.buckets[0]
+            assert (nb.rate, nb.capacity) == before[:2]
+            assert nb.snapshot(now=now)["tokens"] == \
+                pytest.approx(before[2])
+        cl.submit(_req(t, k=i, tokens=tokens, now=now))
+        expected[t] += tokens + _REQ_COST
+        cl.step(now=now)
+        for tt in range(3):
+            cl.assert_ledger_conservation(tt)
+    assert rec is not None and rec.plane == "serve"
+    assert cl.engines[0].scheduler.policy != old_policy
+    # drain on the swapped-in stack: every submitted token lands exactly
+    # once in the continuous (carried + live) ledger
+    for j in range(80):
+        cl.step(now=float(len(submits) + j))
+    for t in range(3):
+        assert cl.tenant_served_tokens(t) == expected[t]
+        assert cl.tenant_billed_ground_truth(t) == expected[t]
+        cl.assert_ledger_conservation(t)
+
+
+@settings(max_examples=25)
+@given(ops=st.lists(_SIZES, min_size=1, max_size=8), swap_at=_SWAP_AT,
+       rate=_RATES, cap=_CAPS)
+def test_bytes_swap_at_arbitrary_point_preserves_everything(ops, swap_at,
+                                                            rate, cap):
+    """Same property one plane down: the CoreEngine swap (native xla <->
+    compressed transport) at any point in an op stream."""
+    cl = make_fake_cluster(2, core_plane=True)
+    cl.add_tenant(1, engine=0)
+    cl.core_engines[0].set_tenant_rate(1, rate, burst=cap)
+    pumped = 0
+    swap_at = min(swap_at, len(ops) - 1)
+    rec = None
+    for i, sz in enumerate(ops):
+        now = float(i)
+        if i == swap_at:
+            b = cl.core_engines[0].buckets[1]
+            before = (b.rate, b.capacity, b.snapshot(now=now)["tokens"])
+            rec = swap_live_stack(cl, "bytes", engine=0, now=now)
+            nb = cl.core_engines[0].buckets[1]
+            assert (nb.rate, nb.capacity) == before[:2]
+            assert nb.snapshot(now=now)["tokens"] == \
+                pytest.approx(before[2])
+        core = cl.core_engines[0]
+        op = CommOp(verb="psum", axes=("pod",), tenant_id=1,
+                    size_bytes=int(sz))
+        core.admit(op, now)
+        core.route(op)
+        pumped += int(sz)
+        assert cl.tenant_core_bytes(1) == pumped
+        cl.assert_ledger_conservation(1)
+    assert rec is not None and rec.plane == "bytes"
+    assert rec.old_stack != rec.new_stack
+    bytes_plane = next(p for p in cl.planes if p.name == "bytes")
+    assert bytes_plane.ledger.ground_truth(1) == pumped
+
+
+@settings(max_examples=25)
+@given(n_reqs=st.integers(min_value=0, max_value=6),
+       pre_steps=st.integers(min_value=0, max_value=4), tokens=_TOKENS)
+def test_swap_quiesce_drains_exactly_the_inflight_slots(n_reqs, pre_steps,
+                                                        tokens):
+    """Fuzz the swap against the slot machinery: whatever is in flight at
+    swap time finishes (and bills) on the retiring stack during the
+    quiesce; the replacement starts with empty slots; nothing drops."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    for r in range(n_reqs):
+        cl.submit(_req(0, k=r, tokens=tokens))
+    for i in range(pre_steps):
+        cl.step(now=float(i))
+    inflight = cl.engines[0].inflight()
+    rec = swap_live_stack(cl, "serve", engine=0, now=float(pre_steps))
+    assert rec.inflight_at_swap == inflight
+    assert (rec.quiesce_steps > 0) == (inflight > 0)
+    assert cl.engines[0].inflight() == 0
+    for j in range(60):
+        cl.step(now=float(pre_steps + 1 + j))
+    assert cl.tenant_served_tokens(0) == n_reqs * (tokens + _REQ_COST)
+    cl.assert_ledger_conservation(0)
+
+
+def test_swap_refused_while_engine_is_a_draining_source():
+    """A drain's residual billing lives on the source module until the
+    last slot retires — swapping that module out would strand it."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0, tokens=6))
+    cl.step(now=0.0)
+    assert cl.engines[0].inflight() == 1
+    cl.migrate(0, 1, now=0.1)
+    assert cl.draining == {0: 0}
+    with pytest.raises(RuntimeError, match="draining source"):
+        cl.swap_module(0, "serve", FakeEngine, now=0.2)
+    # the drain DESTINATION is not a source — swapping it is legal, and
+    # the mid-drain tenant's state rides across the swap
+    rec = swap_live_stack(cl, "serve", engine=1, now=0.3)
+    assert rec.engine == 1 and 0 in rec.tenants
+    for i in range(20):
+        cl.step(now=1.0 + i)
+    assert not cl.draining
+    # drain finalized: the source engine swaps fine now
+    rec = swap_live_stack(cl, "serve", engine=0, now=30.0)
+    assert rec.engine == 0
+    assert cl.tenant_served_tokens(0) == 6 + _REQ_COST
+    cl.assert_ledger_conservation(0)
+
+
+# ---------------------------------------------------------------------------
+# the quiesced-destination guard (the double-fold / counter-replay edge)
+# ---------------------------------------------------------------------------
+
+
+def _finished_fake(tokens=3):
+    eng = FakeEngine()
+    eng.scheduler.add_tenant(1)
+    eng.submit(_req(1, tokens=tokens))
+    for i in range(tokens + 2):
+        eng.step(now=float(i))
+    assert eng.inflight() == 0
+    return eng
+
+
+def test_import_refused_on_destination_with_live_counters_by_name():
+    """A destination that saw ANY live activity for the tenant — even a
+    bare counter, no queue — is refused, and the error names the
+    offending state so the operator can see what leaked."""
+    src = _finished_fake()
+    state = src.export_tenant(1, now=9.0)
+    dst = FakeEngine()
+    dst.scheduler.account(1, 5)            # pre-seeded live counter
+    with pytest.raises(ValueError, match="served_tokens"):
+        dst.import_tenant(1, state, now=9.0)
+
+
+def test_import_accepted_on_replacement_that_inherited_ground_truth():
+    """The satellite fix pinned: ``inherit_ground_truth`` hands the
+    replacement the retired module's completed records (billed ground
+    truth), which must NOT read as live tenant state to the guard — and
+    the subsequent import must not replay counters (the double-fold
+    would double-bill every carried token)."""
+    old = _finished_fake(tokens=3)
+    truth = old.billed_ground_truth(1)
+    assert truth == 3 + _REQ_COST
+    state = old.export_tenant(1, now=9.0)
+    new = FakeEngine()
+    new.inherit_ground_truth(old)
+    assert new.billed_ground_truth(1) == truth
+    new.import_tenant(1, state, now=9.0)       # guard must allow this
+    # counters start at zero on the new module: the carried side of the
+    # ledger remembers, the live side must not replay
+    assert new.scheduler.served_tokens.get(1, 0) == 0
+    assert new.billed_ground_truth(1) == truth
+
+
+def test_inherit_ground_truth_refuses_an_unquiesced_module():
+    old = FakeEngine()
+    old.scheduler.add_tenant(1)
+    old.submit(_req(1, tokens=6))
+    old.step(now=0.0)
+    assert old.inflight() == 1
+    with pytest.raises(RuntimeError, match="quiesce"):
+        FakeEngine().inherit_ground_truth(old)
+
+
+def test_swap_into_cluster_does_not_double_fold():
+    """Two consecutive swaps of the same slot: each fold carries the live
+    counters exactly once — the continuous ledger never jumps."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0, tokens=4))
+    for i in range(8):
+        cl.step(now=float(i))
+    total = cl.tenant_served_tokens(0)
+    assert total == 4 + _REQ_COST
+    swap_live_stack(cl, "serve", engine=0, now=8.0)
+    assert cl.tenant_served_tokens(0) == total
+    swap_live_stack(cl, "serve", engine=0, now=9.0)
+    assert cl.tenant_served_tokens(0) == total
+    assert cl.tenant_billed_ground_truth(0) == total
+    cl.assert_ledger_conservation(0)
+    assert cl.swaps_total == {"serve": 2}
+
+
+# ---------------------------------------------------------------------------
+# golden stack_swap trace through the swap-lifecycle checker
+# ---------------------------------------------------------------------------
+
+GOLDEN_SWAP_LIFECYCLE = [("swap.quiesce", "b"), ("swap.quiesce", "e"),
+                         ("swap.transfer", "X"), ("swap.resume", "i")]
+
+
+def test_stack_swap_trace_passes_the_swap_lifecycle_rule():
+    cl = make_fake_cluster(3, core_plane=True)
+    trace, cap = scenario_spec("stack_swap", n_tenants=4, intervals=12)
+    with trace_to() as tr:
+        rep = TraceReplayer(cl, capacity=cap).run(
+            trace, events=stack_swap_events(12))
+    assert rep.swaps == 2
+    assert {r.plane for r in cl.swap_log} == {"serve", "bytes"}
+    doc = tr.chrome_trace()
+    assert check_trace_mod.check_trace(doc, scenario="stack_swap") == []
+    swaps = [(e["name"], e["ph"]) for e in doc["traceEvents"]
+             if e.get("name", "").startswith("swap.")]
+    assert swaps == GOLDEN_SWAP_LIFECYCLE * 2
+    for t in range(4):
+        cl.assert_ledger_conservation(t)
+
+
+def test_swap_lifecycle_rule_is_not_vacuous():
+    """The no-dispatch-while-quiesced rule goes by event order (the
+    virtual clock makes the window zero-width): inject a dispatch right
+    inside the window and the checker must flag it."""
+    cl = make_fake_cluster(3, core_plane=True)
+    trace, cap = scenario_spec("stack_swap", n_tenants=4, intervals=12)
+    with trace_to() as tr:
+        TraceReplayer(cl, capacity=cap).run(trace,
+                                            events=stack_swap_events(12))
+    doc = tr.chrome_trace()
+    evs = doc["traceEvents"]
+    i = next(i for i, e in enumerate(evs)
+             if e.get("name") == "swap.quiesce" and e.get("ph") == "b")
+    eng = evs[i]["args"]["engine"]
+    tid = next(m["tid"] for m in evs
+               if m.get("ph") == "M"
+               and (m.get("args") or {}).get("name") == f"engine{eng}")
+    evs.insert(i + 1, {"name": "request.dispatch", "ph": "i", "pid": 1,
+                       "tid": tid, "ts": evs[i]["ts"], "s": "t"})
+    probs = check_trace_mod.check_trace(doc)
+    assert any("swap.quiesce window" in p for p in probs)
+    # ...and a missing plane fails the scenario requirement
+    doc["traceEvents"] = [
+        e for e in evs
+        if not (e.get("name", "").startswith("swap.")
+                and (e.get("args") or {}).get("plane") == "bytes")]
+    probs = check_trace_mod.check_trace(doc, scenario="stack_swap")
+    assert any("no swap.transfer on plane 'bytes'" in p for p in probs)

@@ -10,9 +10,16 @@ Checks, in order:
   * per (pid, tid) track, non-async event timestamps are monotonically
     non-decreasing (Perfetto renders out-of-order slices as garbage);
   * async begin/end ("b"/"e") events pair up per (cat, id, name);
+  * any hot-swap events are well-formed: per (engine, plane) the
+    swap.quiesce begin/end, swap.transfer span, and swap.resume instant
+    counts balance, and no ``request.dispatch`` lands on an engine's
+    track while that engine's quiesce window is open (the replay clock
+    is virtual, so the window is judged by event order, not ts);
   * with ``--scenario migration``: the trace contains the full
     stack-module lifecycle — migrate.transfer and migrate.finalize
-    spans, a migrate.drain begin/end pair, and park/unpark instants.
+    spans, a migrate.drain begin/end pair, and park/unpark instants;
+  * with ``--scenario stack_swap``: at least one complete hot-swap on
+    *each* plane (serve and bytes).
 
 Stdlib only (runs in CI before any pip install). Exit 1 with a listing
 on any violation.
@@ -38,6 +45,13 @@ MIGRATION_LIFECYCLE = {
 }
 
 
+# the swap lifecycle: each live hot-swap must show its quiesce window
+# (async b/e), one transfer span, and one resume instant, per
+# (engine, plane) — phase -> counter name used in the balance check
+_SWAP_PHASES = {"b": "quiesce-begin", "e": "quiesce-end",
+                "X": "transfer", "i": "resume", "I": "resume"}
+
+
 def _lifecycle_key(name: str, ph: str) -> str:
     return f"{name}/end" if (name, ph) == ("migrate.drain", "e") else name
 
@@ -50,6 +64,10 @@ def check_trace(doc, scenario=None) -> list:
     last_ts = {}
     async_open = {}
     seen = {}
+    thread_names = {}     # (pid, tid) -> track name, from "M" metadata
+    swap_counts = {}      # (engine, plane) -> {counter name: count}
+    open_quiesce = {}     # engine -> index of the opening swap.quiesce
+    swap_planes = set()   # planes with at least one swap.transfer
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event {i}: not an object")
@@ -59,6 +77,9 @@ def check_trace(doc, scenario=None) -> list:
             problems.append(f"event {i}: unknown phase {ph!r}")
             continue
         if ph == "M":
+            if ev.get("name") == "thread_name":
+                thread_names[(ev.get("pid"), ev.get("tid"))] = \
+                    (ev.get("args") or {}).get("name")
             continue
         name, ts = ev.get("name"), ev.get("ts")
         if not isinstance(name, str) or not name:
@@ -68,6 +89,41 @@ def check_trace(doc, scenario=None) -> list:
             continue
         key = _lifecycle_key(name, ph)
         seen.setdefault(key, set()).add(ph)
+        # -- hot-swap lifecycle: the replay clock is virtual (a whole
+        # quiesce can be zero-width in ts), so the no-dispatch-while-
+        # quiesced rule goes by event ORDER, not timestamps
+        args = ev.get("args") or {}
+        if isinstance(name, str) and name.startswith("swap.") \
+                and ph in _SWAP_PHASES:
+            eng, plane = args.get("engine"), args.get("plane")
+            cnt = swap_counts.setdefault(
+                (eng, plane), {"quiesce-begin": 0, "quiesce-end": 0,
+                               "transfer": 0, "resume": 0})
+            cnt[_SWAP_PHASES[ph]] += 1
+            if name == "swap.quiesce" and ph == "b":
+                if eng in open_quiesce:
+                    problems.append(
+                        f"event {i}: nested swap.quiesce for engine "
+                        f"{eng} (window from event "
+                        f"{open_quiesce[eng]} still open)")
+                open_quiesce[eng] = i
+            elif name == "swap.quiesce" and ph == "e":
+                if eng not in open_quiesce:
+                    problems.append(
+                        f"event {i}: swap.quiesce end without begin "
+                        f"for engine {eng}")
+                else:
+                    del open_quiesce[eng]
+            elif name == "swap.transfer":
+                swap_planes.add(plane)
+        elif name == "request.dispatch" and open_quiesce:
+            tname = thread_names.get((ev.get("pid"), ev.get("tid")))
+            for eng in open_quiesce:
+                if tname == f"engine{eng}":
+                    problems.append(
+                        f"event {i}: request.dispatch on track "
+                        f"{tname!r} inside engine {eng}'s "
+                        f"swap.quiesce window")
         if ph in ("b", "e"):
             # async events live on their (cat, id) timeline, not the
             # track's — don't hold them to per-track monotonicity
@@ -95,6 +151,20 @@ def check_trace(doc, scenario=None) -> list:
     for aid, n in async_open.items():
         if n > 0:
             problems.append(f"async begin without end for {aid}")
+    for (eng, plane), cnt in sorted(swap_counts.items(), key=str):
+        counts = [cnt["quiesce-begin"], cnt["quiesce-end"],
+                  cnt["transfer"], cnt["resume"]]
+        if not (counts[0] == counts[1] == counts[2] == counts[3] >= 1):
+            problems.append(
+                f"swap lifecycle unbalanced for engine {eng} plane "
+                f"{plane!r}: " + ", ".join(
+                    f"{k}={v}" for k, v in sorted(cnt.items())))
+    if scenario == "stack_swap":
+        for plane in ("serve", "bytes"):
+            if plane not in swap_planes:
+                problems.append(
+                    f"stack_swap lifecycle incomplete: no "
+                    f"swap.transfer on plane {plane!r}")
     if scenario == "migration":
         for key, phases in MIGRATION_LIFECYCLE.items():
             name = key.split("/", 1)[0]
@@ -111,7 +181,7 @@ def main(argv=None) -> int:
     ap.add_argument("trace", type=pathlib.Path)
     ap.add_argument("--scenario", default=None,
                     help="also require this scenario's lifecycle events "
-                         "(supported: migration)")
+                         "(supported: migration, stack_swap)")
     args = ap.parse_args(argv)
     try:
         doc = json.loads(args.trace.read_text())
