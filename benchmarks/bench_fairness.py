@@ -45,7 +45,12 @@ costs < 2% of the mean decode-step time, gated in
 benchmarks/bench_thresholds.json — and claim (i): two live stack-module
 hot-swaps mid-burst (serve scheduler variant + bytes NSM flip) drop
 zero tokens, keep both planes' ledgers conserved, hold Jain >= 0.95,
-and bound the p99 e2e blip vs a swap-free baseline.
+and bound the p99 e2e blip vs a swap-free baseline; and claim (j): a
+fabric checkpoint cadence plus a kill of the hottest engine mid-burst,
+recovered from the last snapshot, keeps ZERO conservation violations on
+either plane across the crash, bounds the rolled-back work by one
+checkpoint interval (tokens by capacity x cadence, bytes by the pump's
+cadence volume), and holds Jain >= 0.95.
 
 ``--json OUT.json`` additionally writes every row, claim and verdict as a
 machine-readable document (the bench trajectory artifact CI uploads);
@@ -55,7 +60,10 @@ benchmarks/bench_thresholds.json); ``--trace OUT.json`` records one
 migration-scenario replay as a Chrome trace-event JSON (validated by
 tools/check_trace.py, loadable in Perfetto) — the CI flight-recorder
 artifact; ``--swap-trace OUT.json`` records one stack_swap replay
-(validated by tools/check_trace.py --scenario stack_swap).
+(validated by tools/check_trace.py --scenario stack_swap);
+``--failover-trace OUT.json`` records one failover replay — checkpoint
+cadence, kill, kill-and-restore recovery — (validated by
+tools/check_trace.py --scenario failover).
 """
 from __future__ import annotations
 
@@ -320,13 +328,19 @@ def _autopilot_cluster(capacity, engines, policy):
 def _byte_pump(cluster, op_bytes=4096):
     """(events, pumped) — per-interval synthetic collective traffic: each
     tenant pushes one CommOp through its placed engine's CoreEngine, so
-    the bytes plane has live state for every migration to carry."""
+    the bytes plane has live state for every migration to carry. Tenants
+    placed on a *failed* engine are skipped AND not counted — ``pumped``
+    tracks bytes actually routed, the quantity conservation is judged
+    against (a dark slot takes no collective traffic)."""
     from repro.core.nqe import CommOp
 
     pumped: Dict[int, int] = {}
 
     def pump(cl, now):
+        failed = getattr(cl, "failed", ())
         for t, k in sorted(cl.placement.items()):
+            if k in failed:
+                continue
             ce = cl.core_engines[k]
             op = CommOp(verb="psum", axes=("pod",), tenant_id=t,
                         size_bytes=op_bytes)
@@ -540,6 +554,89 @@ def run_e2e_stack_swap(engines: int = 3,
                      f"blip {blip:.3f}s <= 2s"}
 
 
+def run_e2e_failover(engines: int = 3,
+                     intervals: int = E2E_INTERVALS) -> Dict:
+    """Claim (j): kill-and-restore loses at most one checkpoint interval.
+
+    The adversarial window on the claim-(i) cluster shape (bytes-plane
+    CoreEngine per engine, synthetic collective traffic) with the
+    failover drill riding on top: a fabric checkpoint every
+    ``FAILOVER_CHECKPOINT_EVERY`` intervals, the hottest engine killed
+    mid-burst — deliberately OFF the checkpoint cadence, so real work
+    sits between the last snapshot and the kill — and recovered from
+    that snapshot two intervals later with the buffered admission gap
+    replayed. Gated: >= 1 checkpoint and >= 1 recovery happened, ZERO
+    conservation violations on either plane across the crash (restored
+    counters equal restored ground truth exactly, for every tenant),
+    the work the restore rolled back is bounded by one checkpoint
+    interval (tokens by capacity x cadence seconds; bytes by the pump's
+    per-tenant cadence volume), and Jain >= 0.95 across the crash.
+    """
+    from repro.serve.replay import (
+        FAILOVER_CHECKPOINT_EVERY, TraceReplayer, failover_events,
+        make_replay_cluster, scenario_spec,
+    )
+    n = E2E_TENANTS
+    trace, cap = scenario_spec("failover", n_tenants=n,
+                               intervals=intervals)
+    cl = make_replay_cluster(capacity=cap, engines=engines,
+                             core_plane=True)
+    op_bytes = 4096
+    pump, pumped = _byte_pump(cl, op_bytes=op_bytes)
+    rep = TraceReplayer(cl, capacity=cap).run(
+        trace, events=failover_events(intervals, pump=pump))
+
+    # conservation across the crash: the stack_swap equality
+    # tenant_core_bytes == pumped does NOT apply here — bytes routed
+    # between the last checkpoint and the kill are legitimately rolled
+    # back by the restore. Instead: both planes' ledgers must balance
+    # exactly (zero violations), and the per-tenant rollback must fit
+    # inside one checkpoint interval of pump traffic.
+    ok = {"serve": True, "bytes": True}
+    bytes_budget = FAILOVER_CHECKPOINT_EVERY * op_bytes
+    rolled = 0.0
+    for t in range(n):
+        for plane in cl.planes:
+            try:
+                plane.ledger.assert_conservation(t, plane=plane.name)
+            except AssertionError:
+                ok[plane.name] = False
+        gap = pumped.get(t, 0) - cl.tenant_core_bytes(t)
+        rolled += max(gap, 0.0)
+        if gap < 0 or gap > bytes_budget:
+            ok["bytes"] = False
+    serve_ok, bytes_ok = ok["serve"], ok["bytes"]
+
+    # token loss, measured by the recovery itself (ground truth at the
+    # crash minus ground truth restored), bounded by one checkpoint
+    # interval of cluster capacity (trace intervals are 1 virtual s)
+    recs = [r for r in cl.failure_log if r.recovered]
+    tokens_lost = sum(r.tokens_lost for r in recs)
+    token_budget = FAILOVER_CHECKPOINT_EVERY * 1.0 * cap
+    loss_frac = tokens_lost / token_budget
+    jain = rep.jain()
+    rows = [("e2e_failover,checkpoints", float(rep.checkpoints)),
+            ("e2e_failover,recoveries", float(rep.recoveries)),
+            ("e2e_failover,jain_index", jain),
+            ("e2e_failover,tokens_lost", tokens_lost),
+            ("e2e_failover,tokens_lost_frac_of_budget", loss_frac),
+            ("e2e_failover,bytes_rolled_back", rolled),
+            ("e2e_failover,serve_ledger_conserved",
+             1.0 if serve_ok else 0.0),
+            ("e2e_failover,bytes_ledger_conserved",
+             1.0 if bytes_ok else 0.0)]
+    ok_all = (rep.checkpoints >= 1 and rep.recoveries >= 1
+              and jain >= 0.95 and serve_ok and bytes_ok
+              and tokens_lost >= 0.0 and loss_frac <= 1.0)
+    return {"rows": rows, "ok": ok_all,
+            "claim": f"{rep.recoveries} kill-and-restore(s) under the "
+                     f"adversarial burst ({rep.checkpoints} "
+                     f"checkpoint(s)): both planes conserved, "
+                     f"{tokens_lost:.0f} tokens lost <= one checkpoint "
+                     f"interval ({token_budget:.0f}), Jain {jain:.3f} "
+                     f">= 0.95"}
+
+
 SMOKE_INTERVALS = 12
 
 
@@ -620,14 +717,17 @@ def run_tracer_overhead(intervals: int = SMOKE_INTERVALS) -> Dict:
                      f"step (< 2%): tracing off is free"}
 
 
-AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot, run_e2e_stack_swap)
+AUTOPILOT = (run_e2e_consolidation, run_e2e_hotspot, run_e2e_stack_swap,
+             run_e2e_failover)
 
 
 def _parse_args(argv):
     opts = {"e2e": "--e2e" in argv, "smoke": "--smoke" in argv,
             "autopilot": "--autopilot" in argv, "engines": 1,
-            "json": None, "trace": None, "swap-trace": None}
-    for flag in ("--engines", "--json", "--trace", "--swap-trace"):
+            "json": None, "trace": None, "swap-trace": None,
+            "failover-trace": None}
+    for flag in ("--engines", "--json", "--trace", "--swap-trace",
+                 "--failover-trace"):
         if flag in argv:
             i = argv.index(flag)
             if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
@@ -649,9 +749,10 @@ def _parse_args(argv):
     if opts["smoke"] and not opts["autopilot"]:
         raise SystemExit("--smoke runs only the autopilot claims: "
                          "add --autopilot")
-    if (opts["trace"] or opts["swap-trace"]) and not opts["e2e"]:
-        raise SystemExit("--trace/--swap-trace record the real datapath: "
-                         "add --e2e")
+    if (opts["trace"] or opts["swap-trace"] or opts["failover-trace"]) \
+            and not opts["e2e"]:
+        raise SystemExit("--trace/--swap-trace/--failover-trace record "
+                         "the real datapath: add --e2e")
     return opts
 
 
@@ -709,6 +810,16 @@ def main(argv=None) -> None:
                         intervals=max(intervals, SMOKE_INTERVALS),
                         trace_path=opts["swap-trace"])
         print(f"wrote {opts['swap-trace']} (stack_swap scenario trace)",
+              file=sys.stderr)
+    if opts["failover-trace"]:
+        # the failover flight-recorder artifact: one failover replay
+        # (checkpoint cadence, kill, kill-and-restore recovery) —
+        # validated by tools/check_trace.py --scenario failover
+        from repro.serve.replay import replay_scenario
+        replay_scenario("failover", n_tenants=E2E_TENANTS,
+                        intervals=max(intervals, SMOKE_INTERVALS),
+                        trace_path=opts["failover-trace"])
+        print(f"wrote {opts['failover-trace']} (failover scenario trace)",
               file=sys.stderr)
     if opts["json"]:
         doc = {"ok": failures == 0,

@@ -396,6 +396,106 @@ class CoreEngine(StackModule):
                 self.buckets[tenant_id] = TokenBucket.restore(
                     state.bucket, now)
 
+    # --- checkpoint / restore (failover) ----------------------------------
+    def snapshot_tenant(self, tenant_id: int,
+                        now: Optional[float] = None) -> TenantState:
+        """Non-destructive ``export_tenant``: same wire shape, tenant
+        keeps routing here. The per-(verb, axes) detail in the payload is
+        the restore's source of truth (``restore_tenant`` re-installs it
+        entry for entry, unlike a migration import)."""
+        with self._lock:
+            ledger = {(k[1], k[2]): (e.ops, e.bytes)
+                      for k, e in self.ledger.items() if k[0] == tenant_id}
+            deferred = {k[1]: (e.ops, e.bytes)
+                        for k, e in self.deferred.items()
+                        if k[0] == tenant_id}
+            adm = self.admitted.get(tenant_id)
+            wait = self.admit_wait_s.get(tenant_id, 0.0)
+            return TenantState(
+                plane="bytes",
+                bucket=(self.buckets[tenant_id].snapshot(now)
+                        if tenant_id in self.buckets else None),
+                carried={
+                    "ops": sum(o for o, _ in ledger.values()),
+                    "bytes": sum(b for _, b in ledger.values()),
+                    "deferred_ops": sum(o for o, _ in deferred.values()),
+                    "deferred_bytes": sum(b for _, b in deferred.values()),
+                    "admitted_ops": adm.ops if adm else 0,
+                    "admitted_bytes": adm.bytes if adm else 0,
+                    "admit_wait_s": wait,
+                },
+                payload={
+                    "ledger": ledger,
+                    "deferred": deferred,
+                    "admitted": (adm.ops, adm.bytes) if adm else (0, 0),
+                })
+
+    def restore_tenant(self, tenant_id: int, state: TenantState,
+                       now: Optional[float] = None) -> None:
+        """Install a checkpoint snapshot onto a crashed engine: the full
+        per-(verb, axes) ledger detail, deferred and admitted counters
+        come back (unlike ``import_tenant``). Refused on any live state
+        for the tenant — a double restore must raise, never re-add.
+        Zero-valued entries are skipped: materializing them in the
+        defaultdicts would make the tenant read as live forever."""
+        if state.plane != self.plane:
+            raise ValueError(
+                f"cannot restore a {state.plane!r}-plane TenantState into "
+                f"the {self.plane} plane")
+        with self._lock:
+            live = self._live_state(tenant_id)
+            if live:
+                raise ValueError(
+                    f"tenant {tenant_id} has live bytes-plane state on "
+                    f"this engine ({', '.join(live)}); restore requires a "
+                    f"crashed/quiesced module")
+            for (verb, axes), (ops, byts) in \
+                    (state.payload.get("ledger") or {}).items():
+                if ops or byts:
+                    e = self.ledger[(tenant_id, verb, tuple(axes))]
+                    e.ops, e.bytes = int(ops), int(byts)
+            for axes, (ops, byts) in \
+                    (state.payload.get("deferred") or {}).items():
+                if ops or byts:
+                    e = self.deferred[(tenant_id, tuple(axes))]
+                    e.ops, e.bytes = int(ops), int(byts)
+            adm_ops, adm_bytes = state.payload.get("admitted", (0, 0))
+            if adm_ops or adm_bytes:
+                e = self.admitted[tenant_id]
+                e.ops, e.bytes = int(adm_ops), int(adm_bytes)
+            wait = float(state.carried.get("admit_wait_s", 0.0))
+            if wait:
+                self.admit_wait_s[tenant_id] = wait
+            if state.bucket is not None:
+                self.buckets[tenant_id] = TokenBucket.restore(
+                    state.bucket, now)
+
+    def ground_truth_map(self) -> Dict[int, float]:
+        """Every tenant's billed bytes on this engine — including tenants
+        that migrated away but stay billed here."""
+        with self._lock:
+            return {t: float(b) for t, b in self.billed.items() if b}
+
+    def restore_ground_truth(self, tenant_id: int, value: float) -> None:
+        """SET one tenant's billed-bytes ground truth from a checkpoint."""
+        with self._lock:
+            self.billed[tenant_id] = int(value)
+
+    def crash(self) -> None:
+        """Simulated crash: every tenant's enforcement and accounting
+        state wiped in place. Routing config (rules, default NSM, mesh,
+        enforcement mode) survives — a restarted switch routes the same
+        way the moment state is restored."""
+        with self._lock:
+            self.ledger.clear()
+            self.deferred.clear()
+            self.admitted.clear()
+            self.admit_wait_s.clear()
+            self.billed.clear()
+            self.route_log.clear()
+            self.throttle_log.clear()
+            self.buckets.clear()
+
     def live_counters(self, fld: str) -> Dict[int, float]:
         """Live per-tenant totals for one ``ledger_fields`` entry,
         flattened from the per-(verb, axes) detail under the lock."""

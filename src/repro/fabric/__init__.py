@@ -5,15 +5,19 @@ uniform, swappable interface. This package is that interface for tenant
 lifecycle: any engine — the serving plane's ``ServeEngine``/scheduler, the
 bytes plane's ``CoreEngine``, a jit-free test double — implements
 ``StackModule``, and the cluster/placement layers move, fold, conserve,
-suspend and resume tenants through it without ever naming a concrete
-engine class.
+suspend, resume, checkpoint and restore tenants through it without ever
+naming a concrete engine class.
 """
+from repro.fabric.checkpoint import (
+    FABRIC_SNAPSHOT_VERSION, FabricSnapshot, ModuleSnapshot, PlaneSnapshot,
+)
 from repro.fabric.module import (
     ConservationLedger, SchedulerServeModule, StackModule, StackPlane,
     TenantLoad, TenantState,
 )
 
 __all__ = [
-    "ConservationLedger", "SchedulerServeModule", "StackModule",
-    "StackPlane", "TenantLoad", "TenantState",
+    "FABRIC_SNAPSHOT_VERSION", "FabricSnapshot", "ModuleSnapshot",
+    "PlaneSnapshot", "ConservationLedger", "SchedulerServeModule",
+    "StackModule", "StackPlane", "TenantLoad", "TenantState",
 ]

@@ -135,6 +135,47 @@ class StackModule:
         destructive export."""
         raise NotImplementedError
 
+    # -- checkpoint lifecycle (failover) ------------------------------------
+    def snapshot_tenant(self, tenant_id: int,
+                        now: Optional[float] = None) -> TenantState:
+        """Non-destructive ``export_tenant``: the same ``TenantState``
+        wire shape, but the tenant keeps running here — the checkpoint
+        half of failover. Unlike an export, the snapshot also captures
+        the module's LIVE cumulative counters in ``carried`` (a restore
+        re-installs them so the post-crash ledger picks up exactly where
+        the checkpoint left it)."""
+        raise NotImplementedError
+
+    def restore_tenant(self, tenant_id: int, state: TenantState,
+                       now: Optional[float] = None) -> None:
+        """Install a snapshot onto a crashed-and-rebuilt module: full
+        state INCLUDING counters, unlike ``import_tenant`` (which carries
+        counters in the operator's ledger instead). Refuses a
+        destination with any live state for the tenant — restoring twice
+        after a failed attempt must raise, never silently re-add."""
+        raise NotImplementedError
+
+    def ground_truth_map(self) -> Dict[int, float]:
+        """Every tenant's billed ground truth on this module — including
+        tenants that migrated away but left their never-migrates history
+        (completed records / billed bytes) here. A checkpoint captures
+        this whole map; restoring only currently-placed tenants would
+        drop the departed tenants' share and break conservation."""
+        raise NotImplementedError
+
+    def restore_ground_truth(self, tenant_id: int, value: float) -> None:
+        """SET (never add) one tenant's billed-ground-truth share on a
+        crashed-and-rebuilt module, from a checkpoint's
+        ``ground_truth_map``."""
+        raise NotImplementedError
+
+    def crash(self) -> None:
+        """Simulated module crash: wipe ALL live state in place —
+        queues, slots, counters, ground truth. Routing/config survives
+        (a restarted stack keeps its build config); telemetry reads the
+        counter drop as a reset (Prometheus discipline)."""
+        raise NotImplementedError
+
     def fold(self, state: TenantState) -> Dict[str, float]:
         """Ledger-field increments an export contributes to the carried
         view. Default: the state's own flattened counters."""
@@ -248,6 +289,62 @@ class SchedulerServeModule(StackModule):
     def has_tenant(self, tenant_id: int) -> bool:
         return tenant_id in self.scheduler.queues
 
+    # -- checkpoint lifecycle -----------------------------------------------
+    def snapshot_tenant(self, tenant_id: int,
+                        now: Optional[float] = None) -> TenantState:
+        return self.scheduler.snapshot_tenant(tenant_id, now)
+
+    def restore_tenant(self, tenant_id: int, state: TenantState,
+                       now: Optional[float] = None) -> None:
+        self.scheduler.restore_tenant(tenant_id, state, now)
+
+    def ground_truth_map(self) -> Dict[int, float]:
+        out: Dict[int, float] = dict(self.__dict__.get("_gt_baseline") or {})
+        for r in self.completed:
+            t = r.tenant_id
+            out[t] = out.get(t, 0.0) + len(r.prompt) + len(r.generated)
+        for s in self.slots:
+            if s.active and s.req is not None:
+                t = s.req.tenant_id
+                out[t] = out.get(t, 0.0) \
+                    + len(s.req.prompt) + len(s.req.generated)
+        return out
+
+    def restore_ground_truth(self, tenant_id: int, value: float) -> None:
+        # completed Request records died with the crash; the restored
+        # share lives in a baseline the billed_ground_truth sum includes
+        base = self.__dict__.get("_gt_baseline")
+        if base is None:
+            base = self._gt_baseline = {}
+        base[tenant_id] = float(value)
+
+    def restore_latency(self, snap: Dict[str, Dict[int, dict]]) -> None:
+        """Wholesale REPLACE of the engine-side latency families from a
+        checkpoint's ``{family: {tenant: Histogram payload}}`` view —
+        replace, never merge: re-importing the same snapshot after a
+        failed restore attempt must rebaseline the counts, not re-add
+        them."""
+        from repro.obs.hist import Histogram
+        hists = self.latency_hists()
+        for fam, th in hists.items():
+            th.per_tenant = {
+                int(t): Histogram.from_payload(p)
+                for t, p in (snap.get(fam) or {}).items()}
+
+    def crash(self) -> None:
+        """Wipe the serve module in place: queued + in-flight work lost,
+        counters and completed records gone, latency tails gone. The
+        scheduler/slot config and compiled stack survive — a restarted
+        engine slot serves again the moment state is restored.
+        ``decode_steps`` (the perf meter) is kept: wiping it would make
+        windowed step diffs negative in replay reports."""
+        self.scheduler.wipe()
+        self.slots = self._make_slots()
+        self.completed.clear()
+        self.__dict__.pop("_latency_hists", None)
+        self.__dict__.pop("_gt_baseline", None)
+        self.suspended = False
+
     def live_counters(self, fld: str) -> Dict[int, float]:
         if fld not in self.ledger_fields:
             raise KeyError(f"unknown serve ledger field {fld!r}")
@@ -268,6 +365,11 @@ class SchedulerServeModule(StackModule):
             if s.active and s.req is not None \
                     and s.req.tenant_id == tenant_id:
                 total += len(s.req.prompt) + len(s.req.generated)
+        # plus any share restored from a checkpoint (the completed
+        # records it summarizes died with the crash)
+        base = self.__dict__.get("_gt_baseline")
+        if base:
+            total += base.get(tenant_id, 0.0)
         return float(total)
 
     def inherit_ground_truth(self, old: "SchedulerServeModule") -> None:
@@ -281,6 +383,14 @@ class SchedulerServeModule(StackModule):
                 f"cannot inherit ground truth: {old.inflight()} slot(s) "
                 f"still in flight on the retiring module; quiesce first")
         self.completed.extend(old.completed)
+        # a restored-from-checkpoint baseline is ground truth too
+        old_base = old.__dict__.get("_gt_baseline")
+        if old_base:
+            base = self.__dict__.get("_gt_baseline")
+            if base is None:
+                base = self._gt_baseline = {}
+            for t, v in old_base.items():
+                base[t] = base.get(t, 0.0) + v
         # engine-local latency tails stay attributed to this engine slot
         # across the swap, like the completed records they describe
         hists = self.latency_hists()

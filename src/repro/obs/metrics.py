@@ -71,6 +71,9 @@ METRIC_HELP: Dict[str, str] = {
     "nk_migration_info": "Recent migration records (value = started step)",
     "nk_swaps_total": "Live stack-module hot-swaps, labeled by plane",
     "nk_swap_info": "Recent hot-swap records (value = cluster step)",
+    "nk_checkpoints_total": "Fabric checkpoints taken",
+    "nk_recoveries_total": "Engine kill-and-restore recoveries completed",
+    "nk_engines_failed": "Engines currently failed (dark, awaiting recover)",
     "nk_cluster_parked": "Engines currently parked",
     "nk_parked_engine_steps_total": "Engine-steps skipped while parked",
     "nk_cores_saved": "Average engines parked per cluster step",

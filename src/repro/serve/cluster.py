@@ -50,6 +50,14 @@ Two closed-loop extensions sit on top of the migration primitive:
     exactly how the shared RateController is ticked, and applies its
     plans through ``apply_plan`` -> ``migrate``: the placement loop runs
     closed, next to the rate loop.
+  * **checkpoint / kill-and-restore failover** — ``checkpoint()``
+    captures the whole fabric as one versioned ``FabricSnapshot``
+    (repro.fabric.checkpoint); ``fail_engine`` simulates a crash (module
+    state wiped in place, in-flight slots lost, admissions gap-buffered)
+    and ``recover_engine`` re-materializes the slot from its last
+    snapshot, replays the gap and re-asserts conservation on every
+    plane — the work lost is bounded by one checkpoint interval.
+    ``restore()`` is the full-fabric reset to a snapshot.
 """
 from __future__ import annotations
 
@@ -59,7 +67,10 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.control.telemetry import format_prometheus
-from repro.fabric import StackPlane, TenantState
+from repro.fabric import (
+    FABRIC_SNAPSHOT_VERSION, FabricSnapshot, ModuleSnapshot, PlaneSnapshot,
+    StackPlane, TenantState,
+)
 from repro.obs import tracing
 from repro.obs.hist import TenantHistograms
 from repro.serve.engine import ServeEngine
@@ -102,6 +113,30 @@ class SwapRecord:
     quiesce_steps: int            # extra engine steps the quiesce ran
     old_stack: str                # descriptor of the retired module
     new_stack: str                # descriptor of the replacement
+
+
+@dataclass
+class FailureRecord:
+    """One fail_engine() crash (and its recovery), for the audit log.
+
+    ``tokens_lost`` is the serve-plane ground truth billed between the
+    restored checkpoint and the crash — the work a kill-and-restore
+    failover genuinely loses, bounded by one checkpoint interval. It is
+    -1.0 until ``recover_engine`` computes it against the snapshot it
+    restored from.
+    """
+
+    engine: int                   # engine slot that crashed
+    step: int                     # cluster step count at the crash
+    inflight_lost: int            # decode slots lost with the crash
+    queued_lost: int              # queued requests lost with the crash
+    gt_at_crash: Dict[int, float]  # serve billed ground truth at crash
+    tokens_lost: float = -1.0     # gt billed after the restored snapshot
+    recovered_step: int = -1      # -1 while the slot is still dark
+
+    @property
+    def recovered(self) -> bool:
+        return self.recovered_step >= 0
 
 
 class ClusterLedger:
@@ -250,6 +285,14 @@ class EngineCluster:
         self.migrations_completed = 0
         self.swap_log: List[SwapRecord] = []
         self.swaps_total: Dict[str, int] = {}   # plane name -> swaps done
+        # kill-and-restore failover: engine slots currently dark, the
+        # bounded admission gap buffered per dark slot, and the meters
+        # the checkpoint/recover lifecycle exports
+        self.failed: Set[int] = set()
+        self._gap: Dict[int, List[Request]] = {}
+        self.failure_log: List[FailureRecord] = []
+        self.checkpoints_total = 0
+        self.recoveries_total = 0
         self.completed: List[Request] = []
         self._seen_completed = [len(e.completed) for e in self.engines]
         self.steps = 0
@@ -283,11 +326,17 @@ class EngineCluster:
 
     def submit(self, req: Request) -> int:
         """Route one request to its tenant's placed engine (auto-placing
-        an unknown tenant on the least-loaded one). Returns the engine
-        index it landed on."""
+        an unknown tenant on the least-loaded one). A request for a
+        tenant placed on a FAILED engine is not dropped: it buffers in
+        that slot's admission gap and ``recover_engine`` replays it in
+        arrival order — the gap is bounded by the fail->recover window.
+        Returns the engine index it landed on (or is buffered for)."""
         idx = self.placement.get(req.tenant_id)
         if idx is None:
             idx = self.add_tenant(req.tenant_id)
+        if idx in self.failed:
+            self._gap[idx].append(req)
+            return idx
         self.engines[idx].submit(req)
         return idx
 
@@ -306,7 +355,7 @@ class EngineCluster:
             self.controller.tick(time.monotonic() if now is None else now)
         active = 0
         for k, e in enumerate(self.engines):
-            if k in self.parked:
+            if k in self.parked or k in self.failed:
                 continue
             active += e.step(now=now)
         # account the parked set that actually held during the engine loop
@@ -346,6 +395,9 @@ class EngineCluster:
         if idx in self.parked:
             raise ValueError(f"engine {idx} is parked; unpark it before "
                              f"placing tenant {tenant_id} there")
+        if idx in self.failed:
+            raise ValueError(f"engine {idx} has failed; recover it before "
+                             f"placing tenant {tenant_id} there")
         self.placement[tenant_id] = idx
         self.engines[idx].scheduler.add_tenant(tenant_id, weight=weight)
         return idx
@@ -354,8 +406,9 @@ class EngineCluster:
         self.add_tenant(tenant_id, weight=weight)
 
     def active_engines(self) -> List[int]:
-        """Engine indices currently awake (not parked)."""
-        return [k for k in range(len(self.engines)) if k not in self.parked]
+        """Engine indices currently awake (neither parked nor failed)."""
+        return [k for k in range(len(self.engines))
+                if k not in self.parked and k not in self.failed]
 
     def _auto_place(self) -> int:
         def load(k: int):
@@ -381,7 +434,8 @@ class EngineCluster:
         """True iff engine ``k`` could be parked right now: awake, fully
         quiesced (no placed tenants, no draining source, no queued or
         in-flight work) and not the last awake engine."""
-        if not 0 <= k < len(self.engines) or k in self.parked:
+        if not 0 <= k < len(self.engines) or k in self.parked or \
+                k in self.failed:
             return False
         if len(self.active_engines()) <= 1:
             return False
@@ -493,6 +547,14 @@ class EngineCluster:
         if dst in self.parked:
             raise ValueError(f"engine {dst} is parked; unpark it before "
                              f"migrating tenant {tenant} onto it")
+        if dst in self.failed:
+            raise ValueError(f"engine {dst} has failed; recover it before "
+                             f"migrating tenant {tenant} onto it")
+        if src in self.failed:
+            raise RuntimeError(
+                f"tenant {tenant} is placed on failed engine {src}; its "
+                f"live state died with the crash — recover_engine first, "
+                f"then migrate")
         # validate EVERY plane's destination BEFORE the first destructive
         # export: failing after an export would lose the unserved queue
         # (or strand carried counters half-folded)
@@ -615,6 +677,10 @@ class EngineCluster:
             raise ValueError(
                 f"engine {k} is parked; unpark it before swapping its "
                 f"{plane} module")
+        if k in self.failed:
+            raise ValueError(
+                f"engine {k} has failed; recover it before swapping its "
+                f"{plane} module")
         if any(src == k for src in self.draining.values()):
             raise RuntimeError(
                 f"engine {k} is the draining source of a live migration; "
@@ -723,6 +789,310 @@ class EngineCluster:
             tracing.TRACER.instant("cluster", "swap.resume", ts2,
                                    engine=k, plane=pl.name)
         return rec
+
+    # -- checkpoint / kill-and-restore failover -----------------------------
+    def checkpoint(self, *, now: Optional[float] = None) -> FabricSnapshot:
+        """Capture the whole fabric as one ``FabricSnapshot``.
+
+        Every plane's per-tenant state is exported non-destructively
+        (``StackModule.snapshot_tenant`` — live counters included), plus
+        each module's FULL billed-ground-truth map (departed tenants'
+        never-migrates history included), the serve plane's engine-side
+        latency tails, the per-plane carried ledgers, the placement map,
+        park set, swap log and the controller's soft state.
+
+        The capture is passive: no admission pause, no drain. In-flight
+        slots are deliberately NOT captured — a crash loses them by
+        definition — but their billing-so-far IS (in both the counters
+        and the ground-truth map), so conservation holds exactly on any
+        restore. Refused mid-drain (a draining tenant's residual billing
+        lives in in-flight slots a snapshot cannot carry) and while an
+        engine is failed (the admission-gap buffer is not part of the
+        wire format — recover first). Emits one ``checkpoint`` span per
+        engine so the trace checker can pin recover-after-checkpoint
+        ordering per slot.
+        """
+        if self.draining:
+            raise RuntimeError(
+                f"cannot checkpoint mid-drain (tenants "
+                f"{sorted(self.draining)} still draining): residual "
+                f"billing lives in in-flight slots a snapshot cannot "
+                f"carry; wait for the migration to finalize")
+        if self.failed:
+            raise RuntimeError(
+                f"cannot checkpoint with failed engines "
+                f"{sorted(self.failed)}: their buffered admission gap "
+                f"is not part of the snapshot; recover them first")
+        ts = self._trace_ts(now)
+        planes: List[PlaneSnapshot] = []
+        for plane in self.planes:
+            mods: List[ModuleSnapshot] = []
+            for k, m in enumerate(plane.modules):
+                tenants = {
+                    t: m.snapshot_tenant(t, now)
+                    for t, e in self.placement.items()
+                    if e == k and m.has_tenant(t)}
+                latency: Dict[str, Dict[int, dict]] = {}
+                if plane is self.serve_plane:
+                    latency = {
+                        fam: {t: h.to_payload()
+                              for t, h in th.per_tenant.items()}
+                        for fam, th in m.latency_hists().items()}
+                mods.append(ModuleSnapshot(
+                    tenants=tenants, ground_truth=m.ground_truth_map(),
+                    latency=latency))
+            planes.append(PlaneSnapshot(
+                name=plane.name,
+                carried={f: dict(d)
+                         for f, d in plane.ledger.carried.items()},
+                modules=mods))
+        ctrl: Dict[str, object] = {}
+        if self.controller is not None:
+            ctrl = {"capacity": float(self.controller.capacity),
+                    "ticks": int(self.controller.ticks),
+                    "allocations": dict(self.controller.allocations)}
+        snap = FabricSnapshot(
+            step=self.steps, placement=dict(self.placement),
+            draining={}, parked=sorted(self.parked), planes=planes,
+            controller=ctrl,
+            swap_log=[dict(vars(r), tenants=list(r.tenants))
+                      for r in self.swap_log])
+        self.checkpoints_total += 1
+        if tracing.TRACER.enabled:
+            for k in range(len(self.engines)):
+                tracing.TRACER.span("cluster", "checkpoint", ts, ts,
+                                    engine=k, step=self.steps)
+        return snap
+
+    def _check_snapshot(self, snapshot: FabricSnapshot) -> Dict[str, PlaneSnapshot]:
+        """Shared restore-side validation: version strict-reject (a
+        hand-built snapshot skips ``from_bytes``) and plane/module shape
+        against this cluster. Returns the planes keyed by name."""
+        if snapshot.version != FABRIC_SNAPSHOT_VERSION:
+            raise ValueError(
+                f"unknown FabricSnapshot version {snapshot.version!r} "
+                f"(this cluster understands {FABRIC_SNAPSHOT_VERSION})")
+        by_name = {p.name: p for p in snapshot.planes}
+        for plane in self.planes:
+            if plane.name not in by_name:
+                raise ValueError(
+                    f"snapshot has no {plane.name!r} plane "
+                    f"(have: {sorted(by_name)})")
+            n = len(by_name[plane.name].modules)
+            if n != len(self.engines):
+                raise ValueError(
+                    f"snapshot {plane.name} plane has {n} modules; this "
+                    f"cluster has {len(self.engines)} engines")
+        return by_name
+
+    def fail_engine(self, k: int, *,
+                    now: Optional[float] = None) -> FailureRecord:
+        """Simulated crash of one engine slot: every plane's module at
+        ``k`` is wiped in place (``StackModule.crash``) — queued and
+        in-flight work lost, counters and billed records gone, latency
+        tails gone. The slot stops stepping and stops receiving
+        dispatches; requests for its tenants buffer in a bounded
+        admission gap that ``recover_engine`` replays. For tenants placed
+        on the slot, live counters equal the module's billed ground truth
+        at every instant, so wiping both sides together preserves
+        conservation. Ground-truth history the slot holds for tenants
+        placed ELSEWHERE (a drained migration leaves its completed
+        records on the source forever) is finalized billing the carried
+        ledger already references — it is re-seeded as a baseline, not
+        lost: a crash destroys live state, not the billing record.
+        Conservation is asserted for every placed tenant before
+        returning.
+
+        Refused for a parked engine (park and failure are distinct
+        lifecycle states — unpark first), for the draining source of a
+        live migration (the residual billing would be unrecoverable),
+        and for the last live engine.
+        """
+        if not 0 <= k < len(self.engines):
+            raise IndexError(f"engine {k} not in cluster")
+        if k in self.failed:
+            raise ValueError(f"engine {k} has already failed")
+        if k in self.parked:
+            raise ValueError(
+                f"engine {k} is parked; unpark it before failing it")
+        if any(src == k for src in self.draining.values()):
+            raise RuntimeError(
+                f"engine {k} is the draining source of a live migration; "
+                f"crashing it now would lose the residual billing "
+                f"forever — wait for the drain to finalize")
+        if len(self.active_engines()) <= 1:
+            raise ValueError(
+                f"engine {k} is the last live engine; refusing to fail "
+                f"the whole cluster")
+        serve_mod = self.serve_plane.modules[k]
+        rec = FailureRecord(
+            engine=k, step=self.steps,
+            inflight_lost=int(self.engines[k].inflight()),
+            queued_lost=int(self.engines[k].scheduler.pending()),
+            gt_at_crash=dict(serve_mod.ground_truth_map()))
+        for plane in self.planes:
+            mod = plane.modules[k]
+            history = {t: v for t, v in mod.ground_truth_map().items()
+                       if self.placement.get(t) != k}
+            mod.crash()
+            for t, v in history.items():
+                mod.restore_ground_truth(t, v)
+        self._seen_completed[k] = 0
+        self.failed.add(k)
+        self._gap[k] = []
+        self.failure_log.append(rec)
+        for t in self.placement:
+            self.assert_ledger_conservation(t)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant(
+                "cluster", "fail", self._trace_ts(now), engine=k,
+                inflight_lost=rec.inflight_lost,
+                queued_lost=rec.queued_lost)
+        return rec
+
+    def recover_engine(self, k: int, snapshot: FabricSnapshot, *,
+                       now: Optional[float] = None) -> FailureRecord:
+        """Re-materialize a crashed engine slot from its last
+        ``FabricSnapshot`` and replay the bounded admission gap.
+
+        Per plane (matched by name): the slot's tenants restore through
+        ``StackModule.restore_tenant`` (refused onto live state — the
+        double-restore guard), the module's FULL billed-ground-truth map
+        re-installs (SET, never added), and the serve plane's engine-side
+        latency tails replace wholesale. Carried ledgers are NOT touched:
+        nothing folded while the slot was dark. Tenants placed on the
+        slot after the checkpoint re-register empty (their pre-crash work
+        is lost with the crash, like everything billed after the
+        checkpoint — ``tokens_lost`` on the returned record, bounded by
+        one checkpoint interval). Buffered requests replay through
+        ``submit`` in arrival order, delta-push history is invalidated so
+        fresh rates reach the slot next tick, and conservation is
+        asserted for every placed tenant on every plane.
+        """
+        if not 0 <= k < len(self.engines):
+            raise IndexError(f"engine {k} not in cluster")
+        if k not in self.failed:
+            raise ValueError(
+                f"engine {k} has not failed; recover_engine "
+                f"re-materializes a crashed slot — use restore() for a "
+                f"full-fabric reset")
+        by_name = self._check_snapshot(snapshot)
+        serve_snap = by_name[self.serve_plane.name].modules[k]
+        for t in serve_snap.tenants:
+            if self.placement.get(t) != k:
+                raise ValueError(
+                    f"tenant {t} was on engine {k} at checkpoint time "
+                    f"but is placed on {self.placement.get(t)} now; "
+                    f"recovery needs a checkpoint taken since the last "
+                    f"move")
+        restored: Set[int] = set()
+        for plane in self.planes:
+            snap_mod = by_name[plane.name].modules[k]
+            mod = plane.modules[k]
+            for t, value in snap_mod.ground_truth.items():
+                mod.restore_ground_truth(t, value)
+            for t, state in snap_mod.tenants.items():
+                mod.restore_tenant(t, state, now)
+                restored.add(t)
+            if plane is self.serve_plane:
+                mod.restore_latency(snap_mod.latency)
+        # tenants placed here after the checkpoint: re-register empty so
+        # admission works the moment the slot is live again
+        for t, e in self.placement.items():
+            if e == k and t not in serve_snap.tenants:
+                self.engines[k].scheduler.add_tenant(t)
+        self.failed.discard(k)
+        gap = self._gap.pop(k, [])
+        for req in gap:
+            self.submit(req)
+        if self.controller is not None:
+            for t in restored:
+                self.controller.invalidate_tenant(t)
+        rec = next((r for r in reversed(self.failure_log)
+                    if r.engine == k and not r.recovered), None)
+        if rec is None:        # failed outside fail_engine? keep the log sane
+            rec = FailureRecord(engine=k, step=self.steps,
+                                inflight_lost=0, queued_lost=0,
+                                gt_at_crash={})
+            self.failure_log.append(rec)
+        rec.recovered_step = self.steps
+        rec.tokens_lost = sum(
+            max(gt - float(serve_snap.ground_truth.get(t, 0.0)), 0.0)
+            for t, gt in rec.gt_at_crash.items())
+        self.recoveries_total += 1
+        for t in self.placement:
+            self.assert_ledger_conservation(t)
+        if tracing.TRACER.enabled:
+            ts = self._trace_ts(now)
+            tracing.TRACER.span(
+                "cluster", "recover", ts, ts, engine=k,
+                tenants=len(restored), gap_replayed=len(gap),
+                tokens_lost=rec.tokens_lost)
+        return rec
+
+    def restore(self, snapshot: FabricSnapshot, *,
+                now: Optional[float] = None) -> None:
+        """Full-fabric reset to a ``FabricSnapshot``: every engine slot
+        on every plane crashes in place, then the snapshot's placement,
+        park set, per-tenant states, ground-truth maps, latency tails,
+        carried ledgers, swap log and controller soft state install.
+        In-flight work at snapshot time was never captured (crash
+        semantics) and anything submitted since the snapshot is gone —
+        including failed slots' buffered gaps. Conservation is asserted
+        for every placed tenant before returning."""
+        by_name = self._check_snapshot(snapshot)
+        for plane in self.planes:
+            for m in plane.modules:
+                m.crash()
+        self.failed.clear()
+        self._gap.clear()
+        self.placement = dict(snapshot.placement)
+        self.draining = dict(snapshot.draining)
+        # crash() left every module resumed; re-park per the snapshot
+        # (a freshly wiped module has no cache, so freed bytes are ~0)
+        self.parked = set()
+        self._suspended_bytes.clear()
+        for k in snapshot.parked:
+            self.parked.add(k)
+            freed = sum(p.modules[k].suspend() for p in self.planes)
+            self._suspended_bytes[k] = freed
+        for plane in self.planes:
+            sp = by_name[plane.name]
+            for f in plane.ledger.fields:
+                plane.ledger.carried[f] = dict(sp.carried.get(f, {}))
+            for k, snap_mod in enumerate(sp.modules):
+                mod = plane.modules[k]
+                for t, value in snap_mod.ground_truth.items():
+                    mod.restore_ground_truth(t, value)
+                for t, state in snap_mod.tenants.items():
+                    mod.restore_tenant(t, state, now)
+                if plane is self.serve_plane:
+                    mod.restore_latency(snap_mod.latency)
+        self.steps = int(snapshot.step)
+        self.swap_log = [
+            SwapRecord(**dict(r, tenants=tuple(r.get("tenants", ()))))
+            for r in snapshot.swap_log]
+        self.swaps_total = {}
+        for srec in self.swap_log:
+            self.swaps_total[srec.plane] = \
+                self.swaps_total.get(srec.plane, 0) + 1
+        self._seen_completed = [len(e.completed) for e in self.engines]
+        if self.controller is not None and snapshot.controller:
+            self.controller.capacity = \
+                float(snapshot.controller.get("capacity",
+                                              self.controller.capacity))
+            self.controller.ticks = int(snapshot.controller.get("ticks", 0))
+            self.controller.allocations = dict(
+                snapshot.controller.get("allocations", {}))
+            # full re-push next tick: no stale delta-push judgment may
+            # survive a fabric reset
+            self.controller._last_push.clear()
+        for t in self.placement:
+            self.assert_ledger_conservation(t)
+        if tracing.TRACER.enabled:
+            tracing.TRACER.instant("cluster", "restore",
+                                   self._trace_ts(now),
+                                   step=int(snapshot.step))
 
     def rebalance(self, *, tenant: Optional[int] = None,
                   now: Optional[float] = None) -> Optional[MigrationRecord]:
@@ -911,6 +1281,9 @@ class EngineCluster:
             out[f'nk_migration_info{{seq="{rec.started_step}",'
                 f'tenant="{rec.tenant}",src="{rec.src}",'
                 f'dst="{rec.dst}"}}'] = float(rec.started_step)
+        out["nk_checkpoints_total"] = float(self.checkpoints_total)
+        out["nk_recoveries_total"] = float(self.recoveries_total)
+        out["nk_engines_failed"] = float(len(self.failed))
         for plane_name, n in sorted(self.swaps_total.items()):
             out[f'nk_swaps_total{{plane="{plane_name}"}}'] = float(n)
         # recent hot-swaps as info series (value = cluster step), like

@@ -103,6 +103,8 @@ class ReplayReport:
     mem_saved_bytes: float = 0.0  # avg bytes freed per cluster step
     max_parked_bytes: int = 0     # peak bytes freed by suspended engines
     peak_resident_cache_bytes: int = 0   # lifetime peak resident buffers
+    checkpoints: int = 0          # fabric checkpoints inside this window
+    recoveries: int = 0           # kill-and-restore recoveries this window
 
     def rates(self) -> Dict[int, float]:
         return {t: r.achieved_rate for t, r in self.per_tenant.items()}
@@ -231,6 +233,8 @@ class TraceReplayer:
         steps0 = self.engine.decode_steps
         migrations0 = getattr(self.engine, "migrations_completed", 0)
         swaps0 = len(getattr(self.engine, "swap_log", ()))
+        ckpt0 = getattr(self.engine, "checkpoints_total", 0)
+        recov0 = getattr(self.engine, "recoveries_total", 0)
         cl_steps0 = getattr(self.engine, "steps", 0)
         parked0 = getattr(self.engine, "parked_engine_steps", 0)
         mem0 = getattr(self.engine, "mem_saved_byte_steps", 0)
@@ -342,6 +346,8 @@ class TraceReplayer:
             mem_saved_bytes=mem_steps / cl_steps if cl_steps else 0.0,
             max_parked_bytes=max_parked_bytes,
             peak_resident_cache_bytes=peak_resident,
+            checkpoints=getattr(self.engine, "checkpoints_total", 0) - ckpt0,
+            recoveries=getattr(self.engine, "recoveries_total", 0) - recov0,
         )
 
 
@@ -444,15 +450,17 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
 # every name scenario_spec accepts (trace vocabulary + the cluster-only
 # scenarios layered on top of it)
 SCENARIOS = ("steady", "adversarial", "migration", "correlated", "ramp",
-             "bursty", "consolidation", "hotspot", "stack_swap")
+             "bursty", "consolidation", "hotspot", "stack_swap", "failover")
 
 # scenarios that need an EngineCluster (engines >= 2) to mean anything,
 # with the autopilot policy each one runs by default (None = operator-
 # driven: the migration scenario fires a one-shot operator_rebalance
-# event — plan_once(force=True) — and the stack_swap scenario fires two
-# live swap_module events, one per plane — instead)
+# event — plan_once(force=True) —, the stack_swap scenario fires two
+# live swap_module events, one per plane, and the failover scenario runs
+# a checkpoint/kill/recover drill — instead)
 CLUSTER_SCENARIOS = {"migration": None, "consolidation": "consolidate",
-                     "hotspot": "spread_hot", "stack_swap": None}
+                     "hotspot": "spread_hot", "stack_swap": None,
+                     "failover": None}
 
 
 def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
@@ -472,13 +480,14 @@ def scenario_spec(name: str, *, n_tenants: int = 4, intervals: int = 20,
         trace = mx.steady_trace(n_tenants, intervals, rps=3.0)
         demand = 3.0 * per_req * n_tenants
         cap = capacity or demand * 0.7            # mild, stable contention
-    elif name in ("adversarial", "migration", "stack_swap"):
-        # one spec, three drivers: "migration" is the same adversarial
+    elif name in ("adversarial", "migration", "stack_swap", "failover"):
+        # one spec, four drivers: "migration" is the same adversarial
         # fleet but on a multi-engine cluster, with a mid-window rebalance
-        # (a live migration the Jain/isolation bounds must survive), and
+        # (a live migration the Jain/isolation bounds must survive),
         # "stack_swap" hot-swaps a serve and a bytes stack module
-        # mid-burst — sharing the branch keeps the hog-free baseline
-        # comparable by design
+        # mid-burst, and "failover" kills and restores an engine mid-burst
+        # on a checkpoint cadence — sharing the branch keeps the hog-free
+        # baseline comparable by design
         trace = mx.adversarial_trace(n_tenants, intervals, base=1.0,
                                      hog_factor=10.0)
         cap = capacity or 1.0 * per_req * (n_tenants + 3)
@@ -657,7 +666,10 @@ def _byte_pump_event(cluster, now=None, *, size_bytes: int = 4096):
     if not cores:
         return
     t_now = 0.0 if now is None else float(now)
+    failed = getattr(cluster, "failed", ())
     for t, k in sorted(cluster.placement.items()):
+        if k in failed:
+            continue       # a dark slot takes no collective traffic
         op = CommOp(verb="psum", axes=("pod",), tenant_id=t,
                     size_bytes=size_bytes)
         cores[k].admit(op, t_now)
@@ -678,6 +690,61 @@ def stack_swap_events(intervals: int):
         (bytes_at, lambda cl, now=None: swap_live_stack(cl, "bytes",
                                                         now=now)),
     ]
+    return events
+
+
+class FailoverDrill:
+    """Scripted kill-and-restore failover as replay events: checkpoint
+    the whole fabric on a fixed cadence, crash the hottest engine
+    mid-burst, recover it from the last ``FabricSnapshot`` two intervals
+    later — the admission gap buffered in between replays on recovery.
+
+    Cadence ticks that land while the slot is dark (or mid-drain) are
+    skipped: ``EngineCluster.checkpoint`` refuses both, by contract."""
+
+    def __init__(self):
+        self.snapshot = None
+        self.engine: Optional[int] = None
+
+    def checkpoint(self, cluster, now=None):
+        if getattr(cluster, "failed", None) or cluster.draining:
+            return
+        self.snapshot = cluster.checkpoint(now=now)
+
+    def fail(self, cluster, now=None):
+        if self.snapshot is None:
+            raise RuntimeError(
+                "failover drill fired fail before any checkpoint")
+        self.engine = cluster.hottest_engine()
+        cluster.fail_engine(self.engine, now=now)
+
+    def recover(self, cluster, now=None):
+        cluster.recover_engine(self.engine, self.snapshot, now=now)
+
+
+# checkpoint cadence of the failover drill, in trace intervals — "one
+# checkpoint interval", the unit the token-loss bound is stated in
+FAILOVER_CHECKPOINT_EVERY = 3
+
+
+def failover_events(intervals: int, *, pump=None):
+    """The failover scenario's operator script: collective traffic every
+    interval, a fabric checkpoint every ``FAILOVER_CHECKPOINT_EVERY``
+    intervals, a crash of the hottest engine ~2/5 of the way in — nudged
+    OFF the checkpoint cadence, so real work lands between the last
+    snapshot and the kill and the measured token loss is non-trivial —
+    and recovery from that snapshot two intervals later. ``pump``
+    overrides the per-interval bytes-plane traffic event (the bench
+    passes an instrumented pump that counts what it routed)."""
+    drill = FailoverDrill()
+    every = FAILOVER_CHECKPOINT_EVERY
+    events = [(i, pump or _byte_pump_event) for i in range(intervals)]
+    events += [(i, drill.checkpoint) for i in range(1, intervals, every)]
+    fail_at = max(2 * intervals // 5, 2)
+    if (fail_at - 1) % every == 0:      # keep the kill off the cadence
+        fail_at += 1
+    recover_at = min(fail_at + 2, intervals - 1)
+    events += [(fail_at, drill.fail), (recover_at, drill.recover)]
     return events
 
 
@@ -710,7 +777,12 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     scenario hot-swaps live stack modules mid-burst (a serve-plane
     scheduler variant a third of the way in, a bytes-plane native ->
     compressed transport two thirds in) with collective traffic pumped
-    every interval; it forces ``core_plane=True``.
+    every interval; it forces ``core_plane=True``. The ``failover``
+    scenario checkpoints the fabric every third interval, kills the
+    hottest engine mid-burst and recovers it from the last snapshot two
+    intervals later (gap replayed, conservation asserted on every
+    plane); it also forces ``core_plane=True`` so the crash spans both
+    planes.
 
     ``autopilot`` closes the placement loop on the cluster (policy name or
     a ``PlacementController``); the ``consolidation`` and ``hotspot``
@@ -734,9 +806,10 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                          f"pass engines >= 2 (or an EngineCluster)")
     if autopilot is None:
         autopilot = CLUSTER_SCENARIOS.get(name)
-    if name == "stack_swap":
-        # the scenario swaps one module per plane, so the bytes plane must
-        # exist (and carry traffic — see stack_swap_events' byte pump)
+    if name in ("stack_swap", "failover"):
+        # stack_swap swaps one module per plane and failover crashes both
+        # planes at once, so the bytes plane must exist (and carry
+        # traffic — see the scenarios' shared byte pump)
         core_plane = True
     trace, cap = scenario_spec(name, n_tenants=n_tenants,
                                intervals=intervals, capacity=capacity,
@@ -764,6 +837,8 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
         events = migration_events(intervals)
     elif name == "stack_swap":
         events = stack_swap_events(intervals)
+    elif name == "failover":
+        events = failover_events(intervals)
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
     if trace_path is None:
         return rep.run(trace, events=events)

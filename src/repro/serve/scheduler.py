@@ -250,6 +250,107 @@ class TenantScheduler:
             self.admit_wait_hist.absorb(
                 tenant_id, Histogram.from_payload(hist_payload))
 
+    # -- checkpoint / restore (failover) ------------------------------------
+    @staticmethod
+    def _copy_request(r: Request) -> Request:
+        """A request copy that shares nothing mutable: the checkpoint must
+        not alias live ``generated`` lists, or post-checkpoint decode
+        would silently inflate the snapshot's ground truth."""
+        return Request(tenant_id=r.tenant_id, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, req_id=r.req_id,
+                       arrival=r.arrival, generated=list(r.generated),
+                       admit_time=r.admit_time, finish_time=r.finish_time)
+
+    def snapshot_tenant(self, tenant_id: int,
+                        now: Optional[float] = None) -> TenantState:
+        """Non-destructive ``export_tenant``: same ``TenantState`` wire
+        shape, tenant keeps running here. Two deliberate differences:
+        queued Requests are deep-copied (no aliasing with the live
+        queue), and the payload additionally records the WFQ ``vtime`` —
+        a restore resumes competition exactly where the checkpoint left
+        it instead of re-joining at the destination minimum."""
+        state = TenantState(
+            plane="serve",
+            bucket=(self.buckets[tenant_id].snapshot(now)
+                    if tenant_id in self.buckets else None),
+            carried={
+                "served_tokens": self.served_tokens.get(tenant_id, 0),
+                "admitted_requests":
+                    self.admitted_requests.get(tenant_id, 0),
+                "deferred_polls": self.deferred_polls.get(tenant_id, 0),
+                "admit_wait_sum": self.admit_wait_sum.get(tenant_id, 0.0),
+            },
+            payload={
+                "queue": [self._copy_request(r)
+                          for r in self.queues.get(tenant_id, ())],
+                "weight": self.weights.get(tenant_id, 1.0),
+                "vtime": self.vtime.get(tenant_id, 0.0),
+            })
+        wait_hist = self.admit_wait_hist.per_tenant.get(tenant_id)
+        if wait_hist is not None:
+            state.payload["admit_wait_hist"] = wait_hist.to_payload()
+        return state
+
+    def restore_tenant(self, tenant_id: int, state: TenantState,
+                       now: Optional[float] = None) -> None:
+        """Install a checkpoint snapshot onto a crashed-and-wiped
+        scheduler: FULL state including cumulative counters (unlike
+        ``import_tenant``, which leaves counters to the operator's
+        carried ledger). Refused on any live state — restoring the same
+        tenant twice after a failed attempt must raise, never re-add."""
+        if state.plane != "serve":
+            raise ValueError(
+                f"cannot restore a {state.plane!r}-plane TenantState into "
+                f"the serve plane")
+        live = self._live_state(tenant_id)
+        if live:
+            raise ValueError(
+                f"tenant {tenant_id} has live serve-plane state on the "
+                f"restore target ({', '.join(live)}); restore requires a "
+                f"crashed/quiesced module")
+        self.add_tenant(tenant_id,
+                        weight=state.payload.get("weight", 1.0))
+        # queue copies in: the snapshot stays byte-identical and reusable
+        # even if this restored timeline mutates the requests
+        self.queues[tenant_id].extend(
+            self._copy_request(r) for r in state.payload.get("queue", ()))
+        self.vtime[tenant_id] = float(state.payload.get("vtime", 0.0))
+        self.served_tokens[tenant_id] = \
+            int(state.carried.get("served_tokens", 0))
+        self.admitted_requests[tenant_id] = \
+            int(state.carried.get("admitted_requests", 0))
+        self.deferred_polls[tenant_id] = \
+            int(state.carried.get("deferred_polls", 0))
+        self.admit_wait_sum[tenant_id] = \
+            float(state.carried.get("admit_wait_sum", 0.0))
+        if state.bucket is not None:
+            # now=None keeps the snapshot's own timestamp (virtual-clock
+            # safe: no free refill between checkpoint and restore)
+            self.buckets[tenant_id] = TokenBucket.restore(
+                state.bucket, now)
+        hist_payload = state.payload.get("admit_wait_hist")
+        if hist_payload is not None:
+            # REPLACE, never absorb: a re-restore after a failed attempt
+            # must rebaseline the counts, not double them
+            self.admit_wait_hist.per_tenant[tenant_id] = \
+                Histogram.from_payload(hist_payload)
+
+    def wipe(self) -> None:
+        """Simulated crash: every tenant's queue, counters and bucket are
+        gone in place. Telemetry reads the counter drop as a reset
+        (Prometheus discipline), so a live controller survives it."""
+        self.queues.clear()
+        self.weights.clear()
+        self.buckets.clear()
+        self.vtime.clear()
+        self.served_tokens.clear()
+        self.admitted_requests.clear()
+        self.deferred_polls.clear()
+        self.admit_wait_sum.clear()
+        self.admit_wait_hist.per_tenant.clear()
+        self._rr_order.clear()
+        self.paused = False
+
     def submit(self, req: Request):
         """Enqueue one request; an unknown tenant is auto-registered at
         weight 1.0 (uncapped until a controller pushes a rate)."""

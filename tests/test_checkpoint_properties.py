@@ -1,0 +1,356 @@
+"""Fabric checkpoint/restore properties (hypothesis, shimmed) + satellites.
+
+Mirrors ``tests/test_swap_properties.py`` for the failover path: where
+that file pins ``swap_module`` under fuzzed timing, this one pins
+``EngineCluster.checkpoint`` / ``fail_engine`` / ``recover_engine`` /
+``restore`` — the kill-and-restore primitive the fleet layer needs
+before anyone trusts a cross-cluster drain — at ARBITRARY crash points:
+
+  * a checkpoint -> fail -> recover cycle at any point in a submit/step
+    stream is identity on bucket level/rate/capacity and the carried
+    ledgers, holds the carried + live == billed-ground-truth invariant
+    at every subsequent step, and the drained total equals billed
+    ground truth exactly;
+  * same one plane down: the bytes-plane CoreEngine at any point in an
+    op stream (crash + recover at the checkpoint instant loses nothing
+    — collective routing is synchronous);
+  * serialization is a byte-stable strict round trip:
+    ``from_bytes(to_bytes(s)) == s``, re-encoding reproduces the exact
+    bytes, and an unknown ``version`` is rejected by value — at
+    ``from_bytes``, at ``restore`` and at ``recover_engine``;
+  * restore into a NON-quiesced target is refused: ``recover_engine``
+    on a live engine, and ``restore_tenant`` onto a scheduler with any
+    live state for the tenant (refused BY NAME — the PR 7 live-counter
+    guard pattern), so a second restore after a failed attempt raises
+    instead of re-adding counters;
+  * the latency-histogram restore REBASELINES (wholesale replace):
+    re-importing the same snapshot twice yields the checkpointed
+    counts, never doubled ones;
+  * the failover scenario's trace passes tools/check_trace.py's
+    checkpoint/fail/recover rule, and the rule is not vacuous (a
+    dropped recover, a dropped checkpoint, and an injected dispatch on
+    the dark engine's track all fail it).
+
+Runs under real hypothesis when installed, the deterministic fallback of
+``tests/_hyp.py`` otherwise.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+from _hyp import given, settings, st
+from test_placement import _req, make_fake_cluster
+
+from repro.core.nqe import CommOp
+from repro.fabric import FABRIC_SNAPSHOT_VERSION, FabricSnapshot
+from repro.obs.tracing import trace_to
+from repro.serve.replay import TraceReplayer, failover_events, scenario_spec
+
+_CHECK_TRACE = pathlib.Path(__file__).resolve().parents[1] \
+    / "tools" / "check_trace.py"
+_spec = importlib.util.spec_from_file_location("check_trace", _CHECK_TRACE)
+check_trace_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace_mod)
+
+_RATES = st.floats(min_value=100.0, max_value=1e4)
+_CAPS = st.floats(min_value=10.0, max_value=1e5)
+_TOKENS = st.integers(min_value=1, max_value=6)
+_SIZES = st.integers(min_value=1, max_value=1 << 16)
+# one fuzzed run: a sequence of (tenant, max_new_tokens) submissions,
+# stepped once each, with the crash injected at an arbitrary index
+_SUBMITS = st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              _TOKENS),
+                    min_size=1, max_size=10)
+_CRASH_AT = st.integers(min_value=0, max_value=9)
+
+# FakeEngine billing (mirrors ServeEngine): a request costs
+# max_new_tokens + prompt(2)
+_REQ_COST = 2
+
+
+def _serve_state(snap, engine, tenant):
+    plane = next(p for p in snap.planes if p.name == "serve")
+    return plane.modules[engine].tenants[tenant]
+
+
+@settings(max_examples=25)
+@given(submits=_SUBMITS, crash_at=_CRASH_AT, rate=_RATES)
+def test_serve_recover_at_arbitrary_crash_point_is_identity(submits,
+                                                            crash_at, rate):
+    """Wherever the crash lands: the recovered bucket and carried
+    ledgers equal the checkpoint exactly, and conservation holds at
+    every step after."""
+    cl = make_fake_cluster(2)
+    for t in range(3):
+        cl.add_tenant(t, engine=0)
+    cl.engines[0].scheduler.set_rate(0, rate, None, 0.0)
+    crash_at = min(crash_at, len(submits) - 1)
+    recovered = False
+    for i, (t, tokens) in enumerate(submits):
+        now = float(i)
+        if i == crash_at:
+            snap = cl.checkpoint(now=now)
+            b = cl.engines[0].scheduler.buckets[0]
+            before = (b.rate, b.capacity, b.snapshot(now=now)["tokens"],
+                      {tt: cl.tenant_served_tokens(tt) for tt in range(3)},
+                      {tt: cl.tenant_billed_ground_truth(tt)
+                       for tt in range(3)})
+            rec = cl.fail_engine(0, now=now)
+            cl.recover_engine(0, snap, now=now)
+            assert rec.recovered and rec.tokens_lost == 0.0
+            nb = cl.engines[0].scheduler.buckets[0]
+            assert (nb.rate, nb.capacity) == before[:2]
+            assert nb.snapshot(now=now)["tokens"] == \
+                pytest.approx(before[2])
+            for tt in range(3):
+                assert cl.tenant_served_tokens(tt) == before[3][tt]
+                assert cl.tenant_billed_ground_truth(tt) == before[4][tt]
+                cl.assert_ledger_conservation(tt)
+            recovered = True
+        cl.submit(_req(t, k=i, tokens=tokens, now=now))
+        cl.step(now=now)
+        for tt in range(3):
+            cl.assert_ledger_conservation(tt)
+    assert recovered and cl.recoveries_total == 1 and not cl.failed
+    # drain on the recovered stack: whatever the crash cost (in-flight
+    # remainders are lost by definition), served == billed ground truth
+    for j in range(80):
+        cl.step(now=float(len(submits) + j))
+    for t in range(3):
+        assert cl.tenant_served_tokens(t) == \
+            cl.tenant_billed_ground_truth(t)
+        cl.assert_ledger_conservation(t)
+
+
+@settings(max_examples=25)
+@given(ops=st.lists(_SIZES, min_size=1, max_size=8), crash_at=_CRASH_AT,
+       rate=_RATES, cap=_CAPS)
+def test_bytes_recover_at_arbitrary_crash_point_is_identity(ops, crash_at,
+                                                            rate, cap):
+    """Same property one plane down: collective routing is synchronous,
+    so a crash at the checkpoint instant loses zero bytes and the
+    restored bucket/ledger equal the checkpoint exactly."""
+    cl = make_fake_cluster(2, core_plane=True)
+    cl.add_tenant(1, engine=0)
+    cl.core_engines[0].set_tenant_rate(1, rate, burst=cap)
+    pumped = 0
+    crash_at = min(crash_at, len(ops) - 1)
+    for i, sz in enumerate(ops):
+        now = float(i)
+        if i == crash_at:
+            snap = cl.checkpoint(now=now)
+            b = cl.core_engines[0].buckets[1]
+            before = (b.rate, b.capacity, b.snapshot(now=now)["tokens"])
+            cl.fail_engine(0, now=now)
+            assert cl.failed == {0}
+            cl.recover_engine(0, snap, now=now)
+            nb = cl.core_engines[0].buckets[1]
+            assert (nb.rate, nb.capacity) == before[:2]
+            assert nb.snapshot(now=now)["tokens"] == \
+                pytest.approx(before[2])
+            assert cl.tenant_core_bytes(1) == pumped
+        core = cl.core_engines[0]
+        op = CommOp(verb="psum", axes=("pod",), tenant_id=1,
+                    size_bytes=int(sz))
+        core.admit(op, now)
+        core.route(op)
+        pumped += int(sz)
+        assert cl.tenant_core_bytes(1) == pumped
+        cl.assert_ledger_conservation(1)
+    bytes_plane = next(p for p in cl.planes if p.name == "bytes")
+    assert bytes_plane.ledger.ground_truth(1) == pumped
+
+
+@settings(max_examples=25)
+@given(submits=_SUBMITS, rate=_RATES)
+def test_snapshot_round_trip_is_byte_stable(submits, rate):
+    """``from_bytes(to_bytes(s)) == s`` exactly, and re-encoding the
+    decoded snapshot reproduces the identical bytes."""
+    cl = make_fake_cluster(2, core_plane=True)
+    for t in range(3):
+        cl.add_tenant(t, engine=t % 2)
+    cl.engines[0].scheduler.set_rate(0, rate, None, 0.0)
+    for i, (t, tokens) in enumerate(submits):
+        cl.submit(_req(t, k=i, tokens=tokens, now=float(i)))
+        cl.step(now=float(i))
+    snap = cl.checkpoint(now=float(len(submits)))
+    data = snap.to_bytes()
+    assert snap.to_bytes() == data            # deterministic encoder
+    back = FabricSnapshot.from_bytes(data)
+    assert back == snap
+    assert back.to_bytes() == data            # byte-stable round trip
+
+
+def test_unknown_snapshot_version_is_rejected_everywhere():
+    """Strict-reject by value: at ``from_bytes``, at ``restore`` and at
+    ``recover_engine`` (a hand-built snapshot skips ``from_bytes``)."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    snap = cl.checkpoint(now=0.0)
+    doc = json.loads(snap.to_bytes().decode("utf-8"))
+    doc["version"] = FABRIC_SNAPSHOT_VERSION + 1
+    tampered = json.dumps(doc).encode("utf-8")
+    with pytest.raises(ValueError, match="unknown FabricSnapshot version"):
+        FabricSnapshot.from_bytes(tampered)
+    snap.version = FABRIC_SNAPSHOT_VERSION + 1
+    with pytest.raises(ValueError, match="unknown FabricSnapshot version"):
+        cl.restore(snap)
+    cl.fail_engine(0, now=1.0)
+    with pytest.raises(ValueError, match="unknown FabricSnapshot version"):
+        cl.recover_engine(0, snap, now=1.0)
+
+
+def test_recover_refused_on_a_live_engine():
+    """``recover_engine`` installs checkpoint state — pointing it at an
+    engine that never failed would double-install over live state."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    snap = cl.checkpoint(now=0.0)
+    with pytest.raises(ValueError, match="restore"):
+        cl.recover_engine(0, snap, now=0.0)
+
+
+def test_restore_refused_on_non_quiesced_module_by_name():
+    """The module-level guard (PR 7's live-counter pattern): any live
+    serve-plane state for the tenant refuses the restore, naming the
+    offending state."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0, tokens=4))
+    for i in range(8):
+        cl.step(now=float(i))
+    snap = cl.checkpoint(now=8.0)
+    state = _serve_state(snap, 0, 0)
+    with pytest.raises(ValueError, match="served_tokens"):
+        cl.engines[0].restore_tenant(0, state, now=9.0)
+
+
+def test_double_restore_after_recover_raises_never_readds():
+    """The satellite regression: restoring the same TenantState a second
+    time after a successful recover must raise (the recovered counters
+    are live state now), leaving every counter exactly as restored."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    cl.submit(_req(0, tokens=3))
+    for i in range(8):
+        cl.step(now=float(i))
+    snap = cl.checkpoint(now=8.0)
+    cl.fail_engine(0, now=8.0)
+    cl.recover_engine(0, snap, now=8.0)
+    served = cl.tenant_served_tokens(0)
+    assert served == 3 + _REQ_COST
+    state = _serve_state(snap, 0, 0)
+    with pytest.raises(ValueError, match="served_tokens"):
+        cl.engines[0].restore_tenant(0, state, now=9.0)
+    # and a second recover_engine is refused too: the engine is live
+    with pytest.raises(ValueError, match="restore"):
+        cl.recover_engine(0, snap, now=9.0)
+    assert cl.tenant_served_tokens(0) == served
+    assert cl.tenant_billed_ground_truth(0) == served
+    cl.assert_ledger_conservation(0)
+
+
+def test_latency_restore_rebaselines_not_readds():
+    """``restore_latency`` is a wholesale REPLACE: importing the same
+    checkpointed histogram payload twice yields the checkpointed
+    counts, never doubled ones."""
+    from test_placement import FakeEngine
+    m = FakeEngine()
+    hists = m.latency_hists()
+    for v in (0.1, 0.2, 0.4):
+        hists["nk_ttft_seconds"].observe(7, v)
+        hists["nk_e2e_seconds"].observe(7, 2 * v)
+    snap = {fam: {t: h.to_payload() for t, h in th.per_tenant.items()}
+            for fam, th in hists.items()}
+    m.crash()
+    assert m.latency_hists()["nk_ttft_seconds"].per_tenant == {}
+    m.restore_latency(snap)
+    m.restore_latency(snap)                  # the failed-attempt re-run
+    for fam in ("nk_ttft_seconds", "nk_e2e_seconds"):
+        h = m.latency_hists()[fam].per_tenant[7]
+        assert sum(h.counts) == 3            # not 6: rebaselined
+        assert h.to_payload() == snap[fam][7]
+
+
+def test_checkpoint_refused_mid_drain_and_while_failed():
+    """A snapshot cannot carry a drain's in-flight residual billing nor
+    a failed engine's buffered admission gap; a pre-migration snapshot
+    cannot recover a slot the tenant has since left; and the history a
+    drained migration left on the crashed source survives the dark
+    window (conservation holds while the slot is down)."""
+    cl = make_fake_cluster(2)
+    cl.add_tenant(0, engine=0)
+    stale = cl.checkpoint(now=0.0)
+    cl.submit(_req(0, tokens=6))
+    cl.step(now=0.0)
+    cl.migrate(0, 1, now=0.1)
+    assert cl.draining == {0: 0}
+    with pytest.raises(RuntimeError, match="mid-drain"):
+        cl.checkpoint(now=0.2)
+    for i in range(20):
+        cl.step(now=1.0 + i)
+    assert not cl.draining
+    snap = cl.checkpoint(now=25.0)           # post-drain: legal
+    cl.fail_engine(0, now=30.0)
+    cl.assert_ledger_conservation(0)         # source history preserved
+    with pytest.raises(RuntimeError, match="failed engines"):
+        cl.checkpoint(now=30.0)
+    # the stale snapshot still places tenant 0 on engine 0 — refused
+    with pytest.raises(ValueError, match="since the last move"):
+        cl.recover_engine(0, stale, now=31.0)
+    cl.recover_engine(0, snap, now=31.0)
+    cl.assert_ledger_conservation(0)
+    cl.checkpoint(now=32.0)                  # recovered: legal again
+    assert cl.checkpoints_total == 3
+
+
+# ---------------------------------------------------------------------------
+# golden failover trace through the checkpoint/fail/recover checker rule
+# ---------------------------------------------------------------------------
+
+
+def _failover_trace_doc():
+    cl = make_fake_cluster(3, core_plane=True)
+    trace, cap = scenario_spec("failover", n_tenants=4, intervals=12)
+    with trace_to() as tr:
+        rep = TraceReplayer(cl, capacity=cap).run(
+            trace, events=failover_events(12))
+    return tr.chrome_trace(), rep, cl
+
+
+def test_failover_trace_passes_the_lifecycle_rule():
+    doc, rep, cl = _failover_trace_doc()
+    assert rep.checkpoints >= 1 and rep.recoveries == 1
+    assert len(cl.failure_log) == 1 and cl.failure_log[0].recovered
+    assert check_trace_mod.check_trace(doc, scenario="failover") == []
+    for t in range(4):
+        cl.assert_ledger_conservation(t)
+
+
+def test_failover_lifecycle_rule_is_not_vacuous():
+    """Event-order rule, virtual clock: a dropped recover, a dropped
+    checkpoint, and a dispatch injected onto the dark engine's track
+    must each fail the checker."""
+    doc, _, _ = _failover_trace_doc()
+    evs = doc["traceEvents"]
+    probs = check_trace_mod.check_trace(
+        {"traceEvents": [e for e in evs if e.get("name") != "recover"]},
+        scenario="failover")
+    assert any("never recovered" in p for p in probs)
+    assert any("failover lifecycle incomplete" in p for p in probs)
+    probs = check_trace_mod.check_trace(
+        {"traceEvents": [e for e in evs if e.get("name") != "checkpoint"]})
+    assert any("no preceding checkpoint" in p for p in probs)
+    i = next(i for i, e in enumerate(evs) if e.get("name") == "fail")
+    eng = evs[i]["args"]["engine"]
+    tid = next(m["tid"] for m in evs
+               if m.get("ph") == "M"
+               and (m.get("args") or {}).get("name") == f"engine{eng}")
+    injected = list(evs)
+    injected.insert(i + 1, {"name": "request.dispatch", "ph": "i",
+                            "pid": 1, "tid": tid, "ts": evs[i]["ts"],
+                            "s": "t"})
+    probs = check_trace_mod.check_trace({"traceEvents": injected})
+    assert any(f"while engine {eng} is failed" in p for p in probs)

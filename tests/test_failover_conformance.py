@@ -1,0 +1,125 @@
+"""Failover-conformance: the NSM matrix re-run across kill-and-restore.
+
+The checkpoint/restore claim (kill a stack module, restore it from the
+last snapshot, no tenant loses or double-bills a byte) is only real if
+the RESTORED stack is *numerically* the stack the conformance suite
+certified — a crash must not perturb the wire protocol. This suite
+re-runs every registry-discovered conformance case (same matrix, same
+EF-residual-derived tolerances as test_nsm_conformance) with the twist
+that the target stack arrives via ``fail_engine`` + ``recover_engine``
+mid-stream: the engine routes traffic, a fabric checkpoint is taken,
+MORE traffic lands (deliberately lost with the crash), the engine is
+killed and re-materialized from the snapshot, and the case's verb then
+executes through the recovered engine's routing.
+
+Per case we also pin the bytes-plane ledger across the crash: the bytes
+billed before the checkpoint survive exactly, the post-checkpoint op is
+rolled back (bounded loss, never double-billing), post-recover traffic
+lands on the restored module, and carried + live equals billed ground
+truth exactly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_nsm_conformance import (
+    CASES, _compressed_atol, _ref, _run, _tol, _x,
+)
+from test_placement import FakeEngine
+
+from repro.core.engine import CoreEngine
+from repro.core.nqe import CommOp, payload_bytes
+from repro.core.nsm import available_nsms, get_nsm
+from repro.serve.cluster import EngineCluster
+
+PRE_OPS = 3          # ops routed (and checkpointed) before the crash
+LOST_OPS = 2         # ops routed after the checkpoint — lost with it
+OP_BYTES = 2048
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 2, pod=2)
+
+
+def _failover_cluster(mesh, name):
+    """Two-engine cluster (an engine cannot fail alone) whose first
+    bytes-plane slot runs the case's target stack."""
+    cores = [CoreEngine(mesh=mesh, default_nsm=name,
+                        enforcement="account"),
+             CoreEngine(mesh=mesh, default_nsm="xla",
+                        enforcement="account")]
+    cl = EngineCluster([FakeEngine(), FakeEngine()], core_engines=cores)
+    cl.add_tenant(0, engine=0)
+    return cl
+
+
+def _route(engine, verb, axes, size_bytes=OP_BYTES, now=0.0):
+    op = CommOp(verb=verb, axes=tuple(axes), tenant_id=0,
+                size_bytes=size_bytes)
+    engine.admit(op, now)
+    return engine.route(op)
+
+
+@pytest.mark.parametrize(
+    "name,verb,axes,dtype", CASES,
+    ids=[f"{n}-{v}-{'+'.join(a)}-{jnp.dtype(d).name}"
+         for n, v, a, d in CASES])
+def test_recovered_stack_matches_xla(mesh, name, verb, axes, dtype):
+    cl = _failover_cluster(mesh, name)
+    core = cl.core_engines[0]
+    for _ in range(PRE_OPS):
+        _route(core, verb, axes)
+    billed_pre = core.billed_ground_truth(0)
+    assert billed_pre == PRE_OPS * OP_BYTES
+
+    snap = cl.checkpoint(now=1.0)
+    for _ in range(LOST_OPS):                 # dies with the crash
+        _route(core, verb, axes, now=2.0)
+    assert core.billed_ground_truth(0) == billed_pre \
+        + LOST_OPS * OP_BYTES
+
+    rec = cl.fail_engine(0, now=3.0)
+    cl.recover_engine(0, snap, now=3.0)
+    assert rec.recovered
+    # the recovered slot is the SAME engine, config intact, state
+    # rolled back to the checkpoint: pre-checkpoint bytes survive, the
+    # post-checkpoint ops are gone (lost, never double-billed)
+    assert cl.core_engines[0] is core and core.default_nsm == name
+    assert core.billed_ground_truth(0) == billed_pre
+    assert cl.tenant_core_bytes(0) == billed_pre
+
+    # the case's verb, executed through the recovered engine's routing
+    x = _x(dtype)
+    nsm = _route(core, verb, axes, size_bytes=payload_bytes(x), now=4.0)
+    assert nsm is get_nsm(name)
+    out = _run(mesh, nsm, verb, axes, x)
+    ref = _ref(mesh, verb, axes, dtype, x)
+
+    # same tolerance ladder as the native conformance suite
+    if name == "compressed":
+        atol = _compressed_atol(mesh, verb, axes, dtype, x, ref)
+        if atol is not None:
+            np.testing.assert_allclose(out, ref, rtol=0.0, atol=atol)
+            _assert_bytes_conserved(cl, billed_pre, payload_bytes(x))
+            return
+    tol = _tol(name, dtype)
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * float(np.abs(ref).max()))
+    _assert_bytes_conserved(cl, billed_pre, payload_bytes(x))
+
+
+def _assert_bytes_conserved(cl, billed_pre, post_bytes):
+    plane = next(p for p in cl.planes if p.name == "bytes")
+    plane.ledger.assert_conservation(0, plane="bytes")
+    assert cl.tenant_core_bytes(0) == billed_pre + post_bytes
+    assert cl.tenant_core_bytes(0) == \
+        cl.core_engines[0].billed_ground_truth(0)
+
+
+def test_failover_matrix_covers_every_registered_stack():
+    """The failover suite is only exhaustive if it tracks the registry:
+    every non-native NSM must appear in the recovered-case matrix (the
+    native stack itself is covered by the bytes-plane property suite)."""
+    assert {n for n, _, _, _ in CASES} == set(available_nsms()) - {"xla"}

@@ -15,11 +15,19 @@ Checks, in order:
     counts balance, and no ``request.dispatch`` lands on an engine's
     track while that engine's quiesce window is open (the replay clock
     is virtual, so the window is judged by event order, not ts);
+  * any failover events are well-formed: a ``recover`` span is preceded
+    by a ``fail`` instant AND a ``checkpoint`` span for that engine, no
+    engine fails twice without recovering in between, no
+    ``request.dispatch`` lands on an engine's track between its ``fail``
+    and its ``recover`` (event order, not ts — the replay clock is
+    virtual), and no engine is left failed at the end of the trace;
   * with ``--scenario migration``: the trace contains the full
     stack-module lifecycle — migrate.transfer and migrate.finalize
     spans, a migrate.drain begin/end pair, and park/unpark instants;
   * with ``--scenario stack_swap``: at least one complete hot-swap on
-    *each* plane (serve and bytes).
+    *each* plane (serve and bytes);
+  * with ``--scenario failover``: at least one ``checkpoint`` span, one
+    ``fail`` instant and one ``recover`` span.
 
 Stdlib only (runs in CI before any pip install). Exit 1 with a listing
 on any violation.
@@ -68,6 +76,8 @@ def check_trace(doc, scenario=None) -> list:
     swap_counts = {}      # (engine, plane) -> {counter name: count}
     open_quiesce = {}     # engine -> index of the opening swap.quiesce
     swap_planes = set()   # planes with at least one swap.transfer
+    checkpointed = set()  # engines with at least one checkpoint span
+    open_failed = {}      # engine -> index of the opening fail instant
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event {i}: not an object")
@@ -116,7 +126,31 @@ def check_trace(doc, scenario=None) -> list:
                     del open_quiesce[eng]
             elif name == "swap.transfer":
                 swap_planes.add(plane)
-        elif name == "request.dispatch" and open_quiesce:
+        # -- failover lifecycle: checkpoint-before-recover and the
+        # no-dispatch-while-dark window are judged by event order too
+        elif name == "checkpoint" and ph == "X":
+            checkpointed.add(args.get("engine"))
+        elif name == "fail" and ph in ("i", "I"):
+            eng = args.get("engine")
+            if eng in open_failed:
+                problems.append(
+                    f"event {i}: engine {eng} failed twice without a "
+                    f"recover in between (first fail at event "
+                    f"{open_failed[eng]})")
+            open_failed[eng] = i
+        elif name == "recover" and ph == "X":
+            eng = args.get("engine")
+            if eng not in open_failed:
+                problems.append(
+                    f"event {i}: recover for engine {eng} without a "
+                    f"preceding fail")
+            else:
+                del open_failed[eng]
+            if eng not in checkpointed:
+                problems.append(
+                    f"event {i}: recover for engine {eng} with no "
+                    f"preceding checkpoint span for that engine")
+        elif name == "request.dispatch" and (open_quiesce or open_failed):
             tname = thread_names.get((ev.get("pid"), ev.get("tid")))
             for eng in open_quiesce:
                 if tname == f"engine{eng}":
@@ -124,6 +158,13 @@ def check_trace(doc, scenario=None) -> list:
                         f"event {i}: request.dispatch on track "
                         f"{tname!r} inside engine {eng}'s "
                         f"swap.quiesce window")
+            for eng in open_failed:
+                if tname == f"engine{eng}":
+                    problems.append(
+                        f"event {i}: request.dispatch on track "
+                        f"{tname!r} while engine {eng} is failed "
+                        f"(fail at event {open_failed[eng]}, no "
+                        f"recover yet)")
         if ph in ("b", "e"):
             # async events live on their (cat, id) timeline, not the
             # track's — don't hold them to per-track monotonicity
@@ -151,6 +192,9 @@ def check_trace(doc, scenario=None) -> list:
     for aid, n in async_open.items():
         if n > 0:
             problems.append(f"async begin without end for {aid}")
+    for eng, idx in sorted(open_failed.items(), key=str):
+        problems.append(
+            f"engine {eng} failed at event {idx} and never recovered")
     for (eng, plane), cnt in sorted(swap_counts.items(), key=str):
         counts = [cnt["quiesce-begin"], cnt["quiesce-end"],
                   cnt["transfer"], cnt["resume"]]
@@ -172,6 +216,13 @@ def check_trace(doc, scenario=None) -> list:
                 problems.append(
                     f"migration lifecycle incomplete: no "
                     f"{sorted(phases)} event named {name!r}")
+    if scenario == "failover":
+        for name, phases in (("checkpoint", {"X"}), ("fail", {"i", "I"}),
+                             ("recover", {"X"})):
+            if not (seen.get(name, set()) & phases):
+                problems.append(
+                    f"failover lifecycle incomplete: no "
+                    f"{sorted(phases)} event named {name!r}")
     return problems
 
 
@@ -181,7 +232,7 @@ def main(argv=None) -> int:
     ap.add_argument("trace", type=pathlib.Path)
     ap.add_argument("--scenario", default=None,
                     help="also require this scenario's lifecycle events "
-                         "(supported: migration, stack_swap)")
+                         "(supported: migration, stack_swap, failover)")
     args = ap.parse_args(argv)
     try:
         doc = json.loads(args.trace.read_text())
