@@ -8,6 +8,13 @@ from repro.obs.metrics import (METRIC_HELP, MetricsRegistry,
                                render_prometheus, render_series)
 from repro.obs.tracing import (TRACER, NullTracer, Tracer, get_tracer,
                                set_tracer, trace_to)
+from repro.obs.timeseries import SeriesStore, series_key
+from repro.obs.slo import (Alert, AlertEngine, AlertRule, AbsenceRule,
+                           AdmitWaitSloRule, BurnRateRule,
+                           ConservationDriftRule, FabricWatchdog,
+                           JainFloorRule, ParkedLeakRule, SloSpec,
+                           ThresholdRule, default_rules,
+                           read_scrape_sequence, window_mature)
 
 __all__ = [
     "DEFAULT_BUCKETS", "Histogram", "TenantHistograms",
@@ -16,4 +23,9 @@ __all__ = [
     "render_series",
     "TRACER", "NullTracer", "Tracer", "get_tracer", "set_tracer",
     "trace_to",
+    "SeriesStore", "series_key",
+    "Alert", "AlertEngine", "AlertRule", "AbsenceRule", "AdmitWaitSloRule",
+    "BurnRateRule", "ConservationDriftRule", "FabricWatchdog",
+    "JainFloorRule", "ParkedLeakRule", "SloSpec", "ThresholdRule",
+    "default_rules", "read_scrape_sequence", "window_mature",
 ]

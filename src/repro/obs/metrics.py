@@ -28,6 +28,7 @@ Stdlib only — no jax anywhere near the scrape path.
 """
 from __future__ import annotations
 
+import functools
 import math
 import re
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple
@@ -99,6 +100,12 @@ METRIC_HELP: Dict[str, str] = {
     "nk_ttft_seconds": "Arrival->first-token latency per tenant (s)",
     "nk_e2e_seconds": "Arrival->completion latency per tenant (s)",
     "nk_trace_events_total": "Trace events recorded by the active tracer",
+    "nk_engine_up": "1 while the engine slot is serving, 0 while failed",
+    "nk_engine_heartbeat_total": "Cluster steps the engine actually ran",
+    "nk_watchdog_scrapes_total": "Scrapes the watchdog ingested",
+    "nk_watchdog_rules": "Alert rules the watchdog evaluates",
+    "nk_alerts_total": "Alerts fired, labeled by rule and severity",
+    "nk_alerts_active": "Alert instances currently firing",
 }
 
 # families whose type can't be inferred from the name alone
@@ -176,10 +183,14 @@ def parse_value(text: str) -> float:
     return float(t)
 
 
+@functools.lru_cache(maxsize=8192)
 def parse_series_key(key: str) -> Series:
     """Parse one ``counters()``-dict key — ``name`` or
     ``name{k="v",k2="v2"}`` — into ``(name, ((k, v), ...))``. Raises
-    ``ValueError`` on anything that wouldn't re-render legally."""
+    ``ValueError`` on anything that wouldn't re-render legally.
+
+    Memoized: the watchdog re-parses the same few hundred series
+    strings every scrape, and the result is an immutable tuple."""
     key = key.strip()
     if "{" not in key:
         name, body = key, None
@@ -278,11 +289,17 @@ def parse_prometheus_text(text: str) -> Dict[Series, float]:
     """Parse exposition text back into ``{(name, labels): value}`` —
     the scrape-side inverse ``tools/nk_top.py`` renders from and
     ``tools/check_metrics.py`` validates with. Raises ``ValueError`` on
-    any line the grammar rejects, including duplicate series."""
+    any line the grammar rejects, including duplicate series.
+
+    Tolerated (OpenMetrics-style output, re-wrapped scrapes): blank
+    lines, trailing whitespace (including CRLF line endings), and
+    ``# EOF`` / other non-HELP/TYPE comment lines — so a recorded
+    watchdog scrape round-trips through render->parse->render."""
     out: Dict[Series, float] = {}
     typed: Dict[str, str] = {}
     for lineno, line in enumerate(text.splitlines(), 1):
-        if not line.strip():
+        line = line.rstrip()
+        if not line:
             continue
         if line.startswith("#"):
             parts = line.split(None, 3)

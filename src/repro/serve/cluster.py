@@ -295,6 +295,13 @@ class EngineCluster:
         self.recoveries_total = 0
         self.completed: List[Request] = []
         self._seen_completed = [len(e.completed) for e in self.engines]
+        # liveness ledger the watchdog's engine-dark rule reads: one
+        # heartbeat per engine per cluster step it actually ran (parked
+        # and failed engines do not beat — that absence IS the signal)
+        self.heartbeats: Dict[int, int] = {
+            k: 0 for k in range(len(self.engines))}
+        self.watchdog = None
+        self.watch_every = 1
         self.steps = 0
         self.scheduler = ClusterLedger(self)
         self._note_resident()
@@ -313,6 +320,17 @@ class EngineCluster:
         if place_every is not None:
             self.place_every = max(int(place_every), 1)
         return autopilot
+
+    def attach_watchdog(self, watchdog, scrape_every: int = 1):
+        """Give the fabric its own pulse: tick ``watchdog`` (a
+        ``repro.obs.slo.FabricWatchdog``) every ``scrape_every`` cluster
+        steps, alongside the controller/autopilot cadences. The caller
+        owns the watchdog's registry wiring; this cluster's ``counters``
+        and ``health`` providers are what it should scrape. Returns the
+        watchdog for chaining."""
+        self.watchdog = watchdog
+        self.watch_every = max(int(scrape_every), 1)
+        return watchdog
 
     # -- engine-like surface ------------------------------------------------
     @property
@@ -358,6 +376,7 @@ class EngineCluster:
             if k in self.parked or k in self.failed:
                 continue
             active += e.step(now=now)
+            self.heartbeats[k] = self.heartbeats.get(k, 0) + 1
         # account the parked set that actually held during the engine loop
         # — an engine the autopilot parks below still ran this step and
         # must not be billed as a saved core until the next one
@@ -370,6 +389,9 @@ class EngineCluster:
         if self.autopilot is not None and \
                 self.steps % self.place_every == 0:
             self.autopilot.tick(time.monotonic() if now is None else now)
+        if self.watchdog is not None and \
+                self.steps % self.watch_every == 0:
+            self.watchdog.tick(time.monotonic() if now is None else now)
         return active
 
     # -- placement ----------------------------------------------------------
@@ -1244,6 +1266,22 @@ class EngineCluster:
             for name, th in m.latency().items():
                 out[name] = out[name].merged(th) if name in out \
                     else th.merged(TenantHistograms(name, th.edges))
+        return out
+
+    def health(self) -> Dict[str, float]:
+        """Liveness series for the watchdog's absence rules, kept out of
+        ``counters()`` so existing scrapes are unchanged: ``nk_engine_up``
+        (0 only while failed — a parked engine is asleep, not dead) and
+        ``nk_engine_heartbeat_total`` (steps the engine actually ran; a
+        stalled heartbeat on an unparked engine means the slot is dark).
+        Register alongside ``counters``:
+        ``registry.register_provider(cluster.health, name="health")``."""
+        out: Dict[str, float] = {}
+        for k in range(len(self.engines)):
+            out[f'nk_engine_up{{engine="{k}"}}'] = \
+                0.0 if k in self.failed else 1.0
+            out[f'nk_engine_heartbeat_total{{engine="{k}"}}'] = \
+                float(self.heartbeats.get(k, 0))
         return out
 
     def counters(self) -> Dict[str, float]:

@@ -48,7 +48,9 @@ class TenantReport:
     The percentile columns are histogram estimates (upper edge of the
     bucket the quantile falls in — within one log-bucket width of the
     true sample quantile, see ``repro.obs.hist``), windowed to this run
-    like every other counter. 0.0 when the window observed no samples."""
+    like every other counter. NaN when the window observed no samples
+    (a zero-request tenant in a short scenario): "no data" must not
+    read as "p99 = 0". Renderers show it as ``-``."""
 
     demand_rate: float            # offered load, tokens/s
     achieved_rate: float          # served tokens/s over the replay window
@@ -105,6 +107,23 @@ class ReplayReport:
     peak_resident_cache_bytes: int = 0   # lifetime peak resident buffers
     checkpoints: int = 0          # fabric checkpoints inside this window
     recoveries: int = 0           # kill-and-restore recoveries this window
+    # the watchdog view when the replay ran with one attached: alert
+    # instances that fired inside this window (``repro.obs.slo.Alert``,
+    # in fire order), how many of those resolved before the window
+    # closed, how many were still firing at the end — and the watchdog
+    # itself, so callers can dump its recorded scrape sequence
+    alerts: Optional[Sequence] = None
+    alerts_fired: int = 0
+    alerts_resolved: int = 0
+    alerts_active: int = 0
+    watchdog: Optional[object] = None
+
+    def alerts_by_rule(self) -> Dict[str, int]:
+        """Fired-alert counts per rule name inside this window."""
+        out: Dict[str, int] = {}
+        for a in self.alerts or ():
+            out[a.rule] = out.get(a.rule, 0) + 1
+        return out
 
     def rates(self) -> Dict[int, float]:
         return {t: r.achieved_rate for t, r in self.per_tenant.items()}
@@ -172,13 +191,20 @@ class TraceReplayer:
             keeps the management plane, not the slots, the binding
             constraint.
         weights: per-tenant WFQ weights (dimensionless), default 1.0.
+        watchdog: a ``repro.obs.slo.FabricWatchdog`` to tick on the
+            virtual clock — once before the first interval (the rate
+            baseline) and once at each interval boundary — so every
+            replay doubles as an alert-precision fixture. Its alert
+            activity lands in the report's ``alerts*`` fields.
     """
 
     def __init__(self, engine, *, capacity: float,
                  interval_s: float = 1.0, prompt_len: int = PROMPT_LEN,
                  max_new_tokens: int = MAX_NEW_TOKENS, headroom: float = 1.5,
-                 weights: Optional[Dict[int, float]] = None):
+                 weights: Optional[Dict[int, float]] = None,
+                 watchdog=None):
         self.engine = engine
+        self.watchdog = watchdog
         self.capacity = float(capacity)
         self.interval_s = float(interval_s)
         self.prompt_len = int(prompt_len)
@@ -258,6 +284,13 @@ class TraceReplayer:
                 raise ValueError(f"event interval {idx} out of range for a "
                                  f"{T}-interval trace")
             ev.setdefault(int(idx), []).append(fn)
+        wd = self.watchdog
+        alerts0 = len(wd.alerts.history) if wd is not None else 0
+        if wd is not None and (not wd.store.times()
+                               or start_vt > wd.store.times()[-1]):
+            # the pre-traffic baseline scrape: window rates at interval 0
+            # diff against quiet counters instead of an empty store
+            wd.tick(start_vt)
         frac = np.zeros(n)
         # per-window peaks of engines asleep / bytes freed (the cluster's
         # own high-water marks are lifetime; this report is windowed)
@@ -286,6 +319,8 @@ class TraceReplayer:
                                            parked_bytes())
                 if resident_bytes is not None:
                     peak_resident = max(peak_resident, resident_bytes())
+            if wd is not None:
+                wd.tick(self._vt)
 
         duration = self._vt - start_vt
         completed: Dict[int, int] = {}
@@ -294,13 +329,16 @@ class TraceReplayer:
         lat_now = lat_fn() if lat_fn is not None else {}
 
         def _q(mname: str, tenant: int, q: float) -> float:
+            # NaN, not 0.0, when the window has no samples: a tenant that
+            # never admitted a request has UNKNOWN latency, not a perfect
+            # p99 (renderers show it as '-')
             th = lat_now.get(mname)
             h = th.per_tenant.get(tenant) if th is not None else None
             if h is None:
-                return 0.0
+                return float("nan")
             snap = lat0.get(mname, {}).get(tenant)
             win = h.since(snap) if snap is not None else h
-            return win.quantile(q) if win.total else 0.0
+            return win.quantile(q) if win.total else float("nan")
 
         per_tenant: Dict[int, TenantReport] = {}
         for i in range(n):
@@ -348,6 +386,15 @@ class TraceReplayer:
             peak_resident_cache_bytes=peak_resident,
             checkpoints=getattr(self.engine, "checkpoints_total", 0) - ckpt0,
             recoveries=getattr(self.engine, "recoveries_total", 0) - recov0,
+            alerts=(list(wd.alerts.history[alerts0:])
+                    if wd is not None else None),
+            alerts_fired=(len(wd.alerts.history) - alerts0
+                          if wd is not None else 0),
+            alerts_resolved=(sum(1 for a in wd.alerts.history[alerts0:]
+                                 if a.resolved_at is not None)
+                             if wd is not None else 0),
+            alerts_active=len(wd.alerts.active) if wd is not None else 0,
+            watchdog=wd,
         )
 
 
@@ -445,6 +492,50 @@ def make_replay_cluster(*, capacity: float, engines: int = 3,
             autopilot = PlacementController(cluster, policy=autopilot, **kw)
         cluster.attach_autopilot(autopilot, place_every=place_every)
     return cluster
+
+
+def make_watchdog(engine, *, interval_s: float = 1.0, rules=None,
+                  record: bool = False):
+    """A ``FabricWatchdog`` wired over ``engine``'s live metrics.
+
+    Builds a fresh ``MetricsRegistry``, registers the engine's own
+    exporter (a cluster's ``counters`` folds controller + autopilot +
+    latency; a single engine contributes its controller's merged view)
+    plus the cluster ``health`` liveness provider when one exists, and
+    returns the watchdog running the stock rule catalog with windows
+    sized to ``interval_s`` (the replay's scrape cadence). ``record=True``
+    keeps every scrape's text for the offline ``nk_watch`` artifact.
+
+    The store's retention is bounded at 64 scrapes — far past the widest
+    stock rule window (8 intervals), and it bounds the per-tick
+    evaluation cost instead of letting window scans grow with uptime
+    (the recorded artifact is kept separately, so ``record=True`` still
+    retains the whole run)."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.slo import FabricWatchdog, default_rules
+    from repro.obs.timeseries import SeriesStore
+
+    reg = MetricsRegistry()
+    if hasattr(engine, "migrate"):              # a cluster fabric
+        reg.register_provider(engine, name="cluster")
+        reg.register_provider(engine.health, name="health")
+    else:
+        ctrl = getattr(engine, "controller", None)
+        if ctrl is None:
+            raise ValueError("engine has no controller to scrape; pass a "
+                             "cluster or a controller-attached engine")
+        reg.register_provider(ctrl, name="controller")
+        lat_fn = getattr(engine, "latency", None)
+        if lat_fn is not None:
+            def latency_counters():
+                out = {}
+                for th in lat_fn().values():
+                    out.update(th.counters())
+                return out
+            reg.register_provider(latency_counters, name="latency")
+    return FabricWatchdog(
+        reg, default_rules(interval_s) if rules is None else rules,
+        store=SeriesStore(retention=64), record=record)
 
 
 # every name scenario_spec accepts (trace vocabulary + the cluster-only
@@ -764,7 +855,7 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
                     push_mode: str = "full", weights=None,
                     seed: int = 0, engines: Optional[int] = None,
                     autopilot=None, core_plane: bool = False,
-                    trace_path=None) -> ReplayReport:
+                    trace_path=None, watch=None) -> ReplayReport:
     """Run one named scenario end-to-end and return the measured report.
 
     ``engines`` > 1 drives an ``EngineCluster`` (N ServeEngines behind one
@@ -793,6 +884,15 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     ``trace_path``: write the run's flight-recorder timeline (Chrome
     trace-event JSON, loadable in Perfetto) to this path. A recording
     tracer is installed for the duration of the run and restored after.
+
+    ``watch``: attach the fabric watchdog so the scenario doubles as an
+    alert-precision fixture. ``True`` builds the stock one over the
+    engine (``make_watchdog``); or pass a ready ``FabricWatchdog``
+    (e.g. one constructed with ``record=True`` to keep the scrape
+    sequence). The registry is scraped at every interval boundary and
+    the report's ``alerts*`` fields carry the outcome — steady fires
+    zero, adversarial fires fairness burn on the hog, failover fires
+    and resolves engine-dark (bench claim (k) pins all three).
     """
     from repro.obs.tracing import trace_to
 
@@ -840,6 +940,16 @@ def replay_scenario(name: str, *, n_tenants: int = 4, intervals: int = 20,
     elif name == "failover":
         events = failover_events(intervals)
     rep = TraceReplayer(eng, capacity=cap, weights=weights)
+    wd = watch
+    if wd is True or wd == "record":
+        # the replayer's clock overshoots each interval by up to one
+        # step_dt, so the *effective* scrape period is what the rule
+        # windows must be sized to — else a "3-interval" window holds
+        # fewer scrapes than designed and the absence rules go blind
+        wd = make_watchdog(eng,
+                           interval_s=rep.interval_s + rep.step_dt,
+                           record=(wd == "record"))
+    rep.watchdog = wd or None
     if trace_path is None:
         return rep.run(trace, events=events)
     with trace_to() as tr:

@@ -89,6 +89,26 @@ class FakeEngine(SchedulerServeModule):
         return len(active)
 
 
+class ControlledFakeEngine(FakeEngine):
+    """FakeEngine that drives its own attached ``RateController`` —
+    ``step()`` ticks the controller every ``control_every`` steps, the
+    way ``ServeEngine`` does on the real path. Single-engine replay and
+    watchdog tests need this: a controller nobody ticks never pushes
+    rates, so telemetry/deferral counters stay flat."""
+
+    def __init__(self, batch_slots=4, control_every=4):
+        super().__init__(batch_slots)
+        self.control_every = control_every
+        self._ctl_steps = 0
+
+    def step(self, now=None):
+        self._ctl_steps += 1
+        if self.controller is not None and \
+                self._ctl_steps % self.control_every == 0:
+            self.controller.tick(now)
+        return super().step(now)
+
+
 def make_fake_cluster(n_engines=3, *, core_plane=False, **kw):
     cores = [CoreEngine(enforcement="account") for _ in range(n_engines)] \
         if core_plane else None

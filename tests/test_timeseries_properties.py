@@ -1,0 +1,116 @@
+"""Property tests for the watchdog's time-series math.
+
+Three invariants the alert rules lean on, exercised over generated
+sample sequences (real hypothesis when installed, the seeded fallback
+batch from ``_hyp`` otherwise):
+
+  * ``increase`` is non-negative for ANY sample sequence — arbitrary
+    counter resets (migrations, hot-swaps, restarts) rebaseline instead
+    of going negative, so no rate a rule or ``nk_top --diff`` computes
+    can ever be below zero;
+  * ``increase`` is additive over a window split at a sample boundary:
+    the adjacent-delta pairs partition, so burn-rate shares computed on
+    different windows are consistent with each other;
+  * ``quantile_over_time`` over exported ``_bucket`` series lands inside
+    ``Histogram.quantile_bounds`` for the samples observed inside the
+    window — the windowed p99 the admit-wait rule alerts on is a true
+    bucket-resolution quantile, not an artifact of cumulative counts.
+"""
+import math
+
+from _hyp import given, settings, st
+
+from repro.obs import Histogram, SeriesStore, series_key
+
+# generated counter samples: non-negative, ordinary magnitudes. Lists
+# long enough to contain several resets when values are drawn freely.
+_VALUES = st.lists(st.floats(min_value=0.0, max_value=1e6),
+                   min_size=0, max_size=24)
+
+# histogram observations inside the finite bucket range (DEFAULT_BUCKETS
+# spans 1ms..100s; staying inside keeps quantile_bounds' upper edge
+# finite so the bracket assertion is meaningful either way)
+_OBS = st.lists(st.floats(min_value=0.001, max_value=99.0),
+                min_size=0, max_size=32)
+
+
+def _store_of(values):
+    st_ = SeriesStore()
+    for i, v in enumerate(values):
+        st_.ingest({"nk_c_total": v}, ts=float(i))
+    return st_
+
+
+@settings(max_examples=120, deadline=None)
+@given(values=_VALUES)
+def test_increase_never_negative_under_resets(values):
+    store = _store_of(values)
+    k = series_key("nk_c_total")
+    assert store.increase(k) >= 0.0
+    assert store.rate(k) >= 0.0
+    # and on every sub-window anchored at every sample
+    for now in range(len(values)):
+        for w in (1.0, 3.0, 8.0):
+            assert store.increase(k, window_s=w, now=float(now)) >= 0.0
+            assert store.rate(k, window_s=w, now=float(now)) >= 0.0
+
+
+@settings(max_examples=120, deadline=None)
+@given(values=st.lists(st.floats(min_value=0.0, max_value=1e6),
+                       min_size=2, max_size=24),
+       cut=st.floats(min_value=0.0, max_value=1.0))
+def test_increase_is_additive_over_a_split_window(values, cut):
+    store = _store_of(values)
+    k = series_key("nk_c_total")
+    last = float(len(values) - 1)
+    split = float(int(last * cut))           # a sample boundary
+    total = store.increase(k)
+    # both halves include the boundary sample; each adjacent-delta pair
+    # lands in exactly one half, so the windowed sums partition the total
+    left = store.increase(k, window_s=split - 0.0, now=split)
+    right = store.increase(k, window_s=last - split, now=last)
+    assert math.isclose(left + right, total, rel_tol=1e-9, abs_tol=1e-9)
+
+
+@settings(max_examples=80, deadline=None)
+@given(first=_OBS, second=_OBS,
+       q=st.sampled_from([0.0, 0.25, 0.5, 0.9, 0.99, 1.0]))
+def test_quantile_over_time_is_bracketed_by_histogram_bounds(
+        first, second, q):
+    h = Histogram()
+    store = SeriesStore()
+    # increases need a baseline pair: scrape the empty histogram first,
+    # exactly like the watchdog's pre-traffic baseline tick
+    store.ingest(h.counters("nk_lat_seconds", tenant="0"), ts=0.0)
+    for v in first:
+        h.observe(v)
+    store.ingest(h.counters("nk_lat_seconds", tenant="0"), ts=1.0)
+    for v in second:
+        h.observe(v)
+    store.ingest(h.counters("nk_lat_seconds", tenant="0"), ts=2.0)
+
+    # full window = all samples: must agree with Histogram.quantile and
+    # sit inside quantile_bounds
+    qt = store.quantile_over_time("nk_lat_seconds", q, tenant="0")
+    if not first and not second:
+        assert qt is None
+        return
+    # the bucket edge round-trips through the exposition text's %g
+    # rendering of the `le` label, so compare at that precision
+    assert math.isclose(qt, h.quantile(q), rel_tol=1e-5)
+    lo, hi = h.quantile_bounds(q)
+    assert lo * (1 - 1e-5) <= qt <= hi * (1 + 1e-5)
+
+    # the [t1, t2] sub-window sees only the second batch: compare
+    # against a histogram holding exactly those samples
+    h2 = Histogram()
+    for v in second:
+        h2.observe(v)
+    qt2 = store.quantile_over_time("nk_lat_seconds", q, window_s=1.0,
+                                   now=2.0, tenant="0")
+    if not second:
+        assert qt2 is None
+    else:
+        assert math.isclose(qt2, h2.quantile(q), rel_tol=1e-5)
+        lo2, hi2 = h2.quantile_bounds(q)
+        assert lo2 * (1 - 1e-5) <= qt2 <= hi2 * (1 + 1e-5)

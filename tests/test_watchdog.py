@@ -1,0 +1,650 @@
+"""The fabric watchdog: time-series store, SLO rules, alert lifecycle.
+
+Five claims under test:
+
+  * ``SeriesStore`` is a faithful retention layer: bounded scrape
+    history, counter-reset-aware ``increase``/``rate`` (a decreased
+    sample rebaselines and contributes zero — the live-migration /
+    hot-swap reset semantics), windowed histogram quantiles by the
+    ``Histogram`` upper-edge rule, and identical results whichever
+    scrape form it ingests (exposition text, ``collect()`` dict, flat
+    ``counters()`` dict);
+  * the exposition text round-trips: render -> parse -> render is
+    idempotent, and the parser tolerates blank lines, trailing
+    whitespace and ``# EOF`` — so a recorded watchdog scrape replays;
+  * each stock rule fires exactly on its invariant's violation and
+    stays quiet on startup transients (window maturity), and the
+    ``AlertEngine`` runs the fire-once / stay-active / resolve-once
+    lifecycle with traced instants and exported counters;
+  * the replay scenarios double as alert-precision fixtures on the
+    jit-free fakes: steady fires ZERO alerts, adversarial pages the
+    hog and nobody else, failover fires AND resolves engine-dark,
+    stack_swap raises nothing fleet-level — and the recorded scrape
+    sequence replays OFFLINE (``tools/nk_watch.py``) to the same
+    alerts the live watchdog raised;
+  * an empty latency window reports NaN, never a fake "perfect" 0.0,
+    and every renderer shows it as ``-`` (the nk_top regression).
+"""
+import importlib.util
+import json
+import math
+import pathlib
+
+import pytest
+
+from test_placement import ControlledFakeEngine, make_fake_cluster
+
+from repro.control.controller import RateController
+from repro.obs import (
+    AbsenceRule, Alert, AlertEngine, BurnRateRule, ConservationDriftRule,
+    FabricWatchdog, Histogram, JainFloorRule, MetricsRegistry,
+    ParkedLeakRule, SeriesStore, SloSpec, ThresholdRule, default_rules,
+    parse_prometheus_text, read_scrape_sequence, render_prometheus,
+    render_series, series_key, window_mature,
+)
+from repro.obs.tracing import trace_to
+from repro.serve.replay import make_watchdog, replay_scenario, scenario_spec
+
+_TOOLS = pathlib.Path(__file__).resolve().parents[1] / "tools"
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(name, _TOOLS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+nk_top = _load_tool("nk_top")
+nk_watch = _load_tool("nk_watch")
+check_trace_mod = _load_tool("check_trace")
+
+
+# ---------------------------------------------------------------------------
+# SeriesStore
+# ---------------------------------------------------------------------------
+
+
+def test_store_retention_and_lookups():
+    st = SeriesStore(retention=3)
+    for i in range(5):
+        st.ingest({"nk_x_total": float(i),
+                   'nk_y{tenant="0"}': float(2 * i)}, ts=float(i))
+    assert st.times() == (2.0, 3.0, 4.0)
+    assert st.scrapes == 5
+    assert st.names() == ["nk_x_total", "nk_y"]
+    assert st.series("nk_y") == [("nk_y", (("tenant", "0"),))]
+    assert st.label_values("nk_y", "tenant") == ["0"]
+    assert st.latest(series_key("nk_x_total")) == 4.0
+    # points older than the retained window are gone
+    assert st.window(series_key("nk_x_total"))[0][0] == 2.0
+
+
+def test_store_retention_drops_vanished_series():
+    st = SeriesStore(retention=2)
+    st.ingest({"nk_gone": 1.0}, ts=0.0)
+    st.ingest({"nk_stays": 1.0}, ts=1.0)
+    st.ingest({"nk_stays": 2.0}, ts=2.0)
+    assert st.names() == ["nk_stays"]
+    assert st.latest(series_key("nk_gone")) is None
+
+
+def test_store_rejects_non_monotonic_scrapes():
+    st = SeriesStore()
+    st.ingest({"nk_x": 1.0}, ts=1.0)
+    with pytest.raises(ValueError):
+        st.ingest({"nk_x": 2.0}, ts=1.0)
+
+
+def test_store_ingests_all_three_scrape_forms_identically():
+    counters = {"nk_x_total": 3.0, 'nk_y{tenant="a b"}': 1.5}
+    text = render_prometheus(counters)
+    parsed = parse_prometheus_text(text)
+    stores = [SeriesStore() for _ in range(3)]
+    stores[0].ingest(text, ts=1.0)
+    stores[1].ingest(parsed, ts=1.0)             # Series-keyed dict
+    stores[2].ingest(counters, ts=1.0)           # flat counters() dict
+    want = stores[0].series()
+    for st in stores[1:]:
+        assert st.series() == want
+        for s in want:
+            assert st.latest(s) == stores[0].latest(s)
+
+
+def test_increase_is_reset_aware():
+    st = SeriesStore()
+    # 0 -> 5 (+5), 5 -> 2 (reset: +0), 2 -> 6 (+4)  => 9, never negative
+    for ts, v in [(0, 0.0), (1, 5.0), (2, 2.0), (3, 6.0)]:
+        st.ingest({"nk_c_total": v}, ts=float(ts))
+    k = series_key("nk_c_total")
+    assert st.increase(k) == 9.0
+    assert st.rate(k) == pytest.approx(3.0)      # 9 over 3s
+    # windowed: only the reset pair -> increase 0, rate 0
+    assert st.increase(k, window_s=1.0, now=2.0) == 0.0
+    assert st.rate(k, window_s=1.0, now=2.0) == 0.0
+
+
+def test_rate_needs_two_samples():
+    st = SeriesStore()
+    st.ingest({"nk_c_total": 5.0}, ts=0.0)
+    assert st.rate(series_key("nk_c_total")) == 0.0
+    assert st.increase(series_key("nk_c_total")) == 0.0
+
+
+def test_window_is_inclusive_both_ends():
+    st = SeriesStore()
+    for ts in range(5):
+        st.ingest({"nk_c": float(ts)}, ts=float(ts))
+    k = series_key("nk_c")
+    pts = st.window(k, window_s=2.0, now=3.0)
+    assert [t for t, _ in pts] == [1.0, 2.0, 3.0]
+
+
+def test_quantile_over_time_upper_edge_rule():
+    h = Histogram()
+    st = SeriesStore()
+    st.ingest(h.counters("nk_lat_seconds", tenant="0"), ts=0.0)
+    for v in (0.002, 0.002, 0.002, 5.0):
+        h.observe(v)
+    st.ingest(h.counters("nk_lat_seconds", tenant="0"), ts=1.0)
+    q50 = st.quantile_over_time("nk_lat_seconds", 0.50, tenant="0")
+    q99 = st.quantile_over_time("nk_lat_seconds", 0.99, tenant="0")
+    lo50, hi50 = h.quantile_bounds(0.50)
+    lo99, hi99 = h.quantile_bounds(0.99)
+    assert lo50 <= q50 <= hi50
+    assert lo99 <= q99 <= hi99
+    assert q99 >= 5.0                            # the slow sample's bucket
+    # exact label match: no series for this tenant -> None
+    assert st.quantile_over_time("nk_lat_seconds", 0.5, tenant="9") is None
+    # empty window -> None (no samples observed inside it)
+    assert st.quantile_over_time("nk_lat_seconds", 0.5, window_s=0.25,
+                                 now=0.25, tenant="0") is None
+
+
+# ---------------------------------------------------------------------------
+# exposition round trip (the parser-tolerance satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_parser_tolerates_blank_lines_trailing_ws_and_eof():
+    text = ('# HELP nk_x Things.\n'
+            '# TYPE nk_x gauge  \n'
+            '\n'
+            'nk_x{tenant="0"} 1  \n'
+            '   \n'
+            'nk_x{tenant="1"} 2\r\n'
+            '# EOF\n')
+    got = parse_prometheus_text(text)
+    assert got[("nk_x", (("tenant", "0"),))] == 1.0
+    assert got[("nk_x", (("tenant", "1"),))] == 2.0
+
+
+def test_render_parse_render_is_idempotent():
+    counters = {"nk_a_total": 7.0,
+                'nk_b{le="+Inf",tenant="x\\"y"}': 3.0,
+                "nk_gauge": 0.25}
+    text1 = render_prometheus(counters)
+    d1 = parse_prometheus_text(text1)
+    text2 = render_prometheus(
+        {render_series(n, lbl): v for (n, lbl), v in d1.items()})
+    assert parse_prometheus_text(text2) == d1
+    assert text1 == text2
+
+
+def test_recorded_scrape_sequence_round_trips():
+    reg = MetricsRegistry()
+    state = {"n": 0.0}
+    reg.register_provider(lambda: {"nk_ticks_total": state["n"]},
+                          name="fake")
+    wd = FabricWatchdog(reg, default_rules(), record=True)
+    for i in range(3):
+        state["n"] += 2.0
+        wd.tick(float(i))
+    seq = read_scrape_sequence(wd.scrape_sequence())
+    assert [ts for ts, _ in seq] == [0.0, 1.0, 2.0]
+    for i, (_, text) in enumerate(seq):
+        got = parse_prometheus_text(text)
+        assert got[("nk_ticks_total", ())] == 2.0 * (i + 1)
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+
+def _polls_store(shares, *, interval=1.0, scrapes=12, per_scrape=40.0):
+    """A store where tenant t accrues ``shares[t]`` of ``per_scrape``
+    fleet deferred polls per scrape."""
+    st = SeriesStore()
+    tot = {t: 0.0 for t in shares}
+    for i in range(scrapes):
+        scrape = {}
+        for t, sh in shares.items():
+            tot[t] += sh * per_scrape
+            scrape[f'nk_deferred_polls_total{{tenant="{t}"}}'] = tot[t]
+        st.ingest(scrape, ts=i * interval)
+    return st
+
+
+def _fairness_rule(**kw):
+    return BurnRateRule(
+        "fairness_burn", SloSpec("share", 0.5, "max deferral share"),
+        "nk_deferred_polls_total", fast_window_s=3.0, slow_window_s=8.0,
+        **kw)
+
+
+def test_burn_rate_fires_on_the_hog_only():
+    st = _polls_store({"0": 0.05, "1": 0.05, "2": 0.9})
+    rule = _fairness_rule()
+    viol = rule.evaluate(st, 11.0)
+    assert viol == {(("tenant", "2"),): pytest.approx(1.8)}
+    burns = rule.burn_rates(st, 11.0)
+    assert burns["2"][0] == pytest.approx(1.8)   # fast burn = share/obj
+    assert burns["0"][1] == pytest.approx(0.1)
+
+
+def test_burn_rate_requires_both_windows_burning():
+    # the hog stops cold: slow window still burns, fast goes quiet
+    st = SeriesStore()
+    tot = {"0": 0.0, "1": 0.0}
+    for i in range(12):
+        hog_share = 0.9 if i < 8 else 0.0
+        tot["0"] += (1.0 - hog_share) * 40.0
+        tot["1"] += hog_share * 40.0
+        st.ingest({f'nk_deferred_polls_total{{tenant="{t}"}}': v
+                   for t, v in tot.items()}, ts=float(i))
+    rule = _fairness_rule()
+    assert (("tenant", "1"),) not in rule.evaluate(st, 11.0)
+
+
+def test_burn_rate_min_events_floor_suppresses_trickles():
+    # 90% share of a 2-events-per-scrape trickle must not page
+    st = _polls_store({"0": 0.1, "1": 0.9}, per_scrape=2.0)
+    assert _fairness_rule(min_events=30.0).evaluate(st, 11.0) == {}
+    assert _fairness_rule(min_events=1.0).evaluate(st, 11.0) != {}
+
+
+def test_threshold_rule_on_latest_value():
+    st = SeriesStore()
+    st.ingest({"nk_depth": 5.0}, ts=0.0)
+    rule = ThresholdRule("deep", series_key("nk_depth"), bound=4.0)
+    assert rule.evaluate(st, 0.0) == {(): 5.0}
+    st.ingest({"nk_depth": 3.0}, ts=1.0)
+    assert rule.evaluate(st, 1.0) == {}
+
+
+def test_absence_rule_fires_on_frozen_counter_and_parked_gate():
+    rule = AbsenceRule("engine_dark", "nk_engine_heartbeat_total",
+                       key="engine", gate_family="nk_engine_parked",
+                       window_s=2.0, min_scrapes=3)
+    st = SeriesStore()
+    for i in range(6):
+        beat0 = float(min(i, 2))                 # engine 0 freezes at t=2
+        st.ingest({'nk_engine_heartbeat_total{engine="0"}': beat0,
+                   'nk_engine_heartbeat_total{engine="1"}': float(i),
+                   'nk_engine_parked{engine="0"}': 0.0,
+                   'nk_engine_parked{engine="1"}': 0.0}, ts=float(i))
+    viol = rule.evaluate(st, 5.0)
+    assert viol == {(("engine", "0"),): 0.0}
+    # a PARKED engine's silent heartbeat is intentional, not dark
+    st2 = SeriesStore()
+    for i in range(6):
+        st2.ingest({'nk_engine_heartbeat_total{engine="0"}': 2.0,
+                    'nk_engine_parked{engine="0"}': 1.0}, ts=float(i))
+    assert rule.evaluate(st2, 5.0) == {}
+
+
+def test_window_mature_guards_startup():
+    st = SeriesStore()
+    st.ingest({"nk_x": 1.0}, ts=0.0)
+    st.ingest({"nk_x": 1.0}, ts=1.0)
+    assert not window_mature(st, 1.0, 8.0)       # 1s of an 8s window
+    for i in range(2, 9):
+        st.ingest({"nk_x": 1.0}, ts=float(i))
+    assert window_mature(st, 8.0, 8.0)
+
+
+def test_conservation_rule_fires_past_tolerance_not_on_startup():
+    rule = ConservationDriftRule(window_s=3.0, tol=0.5)
+    st = SeriesStore()
+    served = 0.0
+    for i in range(8):
+        served += 200.0                          # 2x a 100/s capacity
+        st.ingest({"controller_capacity": 100.0,
+                   f'nk_served_tokens_total{{tenant="0"}}': served},
+                  ts=float(i))
+        viol = rule.evaluate(st, float(i))
+        if i < 2:
+            assert viol == {}, "immature window must not page"
+    assert rule.evaluate(st, 7.0) == {(): pytest.approx(2.0)}
+
+
+def _skewed_jain_store(failed_at=None):
+    # three tenants (two-tenant Jain is bounded below by 0.5): one serves
+    # 100x what the other two do
+    st = SeriesStore()
+    tot = {"0": 0.0, "1": 0.0, "2": 0.0}
+    for i in range(10):
+        tot["0"] += 100.0
+        tot["1"] += 1.0
+        tot["2"] += 1.0
+        scrape = {f'nk_served_tokens_total{{tenant="{t}"}}': v
+                  for t, v in tot.items()}
+        scrape["nk_engines_failed"] = 1.0 if i == failed_at else 0.0
+        st.ingest(scrape, ts=float(i))
+    return st
+
+
+def test_jain_rule_fires_on_skew_and_skips_failed_windows():
+    rule = JainFloorRule(window_s=8.0, floor=0.5)
+    viol = rule.evaluate(_skewed_jain_store(), 9.0)
+    assert viol and next(iter(viol.values())) < 0.5
+    # same skew during an engine failure window: engine-dark's problem
+    assert rule.evaluate(_skewed_jain_store(failed_at=5), 9.0) == {}
+
+
+def test_parked_leak_rule_needs_both_parked_and_backlog():
+    rule = ParkedLeakRule(window_s=8.0, queue_floor=16.0)
+
+    def store(parked, depth):
+        st = SeriesStore()
+        for i in range(10):
+            st.ingest({"nk_cluster_parked": parked,
+                       'nk_queue_depth{tenant="0"}': depth,
+                       'nk_queue_depth{tenant="1"}': depth}, ts=float(i))
+        return st
+
+    # parked + deep fleet backlog (2 tenants x 10 >= 16) -> leak
+    assert rule.evaluate(store(1.0, 10.0), 9.0) == {(): 20.0}
+    # awake fleet, or parked over a shallow queue: no alert
+    assert rule.evaluate(store(0.0, 10.0), 9.0) == {}
+    assert rule.evaluate(store(1.0, 2.0), 9.0) == {}
+
+
+def test_alert_engine_lifecycle_and_counters():
+    rule = ThresholdRule("deep", series_key("nk_depth"), bound=4.0,
+                         severity="ticket")
+    eng = AlertEngine([rule])
+    st = SeriesStore()
+    with trace_to() as tr:
+        st.ingest({"nk_depth": 5.0}, ts=0.0)
+        assert [k for k, _ in eng.evaluate(st, 0.0)] == ["fire"]
+        st.ingest({"nk_depth": 6.0}, ts=1.0)
+        assert eng.evaluate(st, 1.0) == []       # still firing: no re-fire
+        st.ingest({"nk_depth": 1.0}, ts=2.0)
+        events = eng.evaluate(st, 2.0)
+    assert [k for k, _ in events] == ["resolve"]
+    a = events[0][1]
+    assert isinstance(a, Alert) and a.resolved_at == 2.0 and not a.active
+    assert a.value == 6.0                        # updated while active
+    assert eng.counters() == {
+        "nk_alerts_active": 0.0,
+        'nk_alerts_total{rule="deep",severity="ticket"}': 1.0}
+    names = [e["name"] for e in tr.chrome_trace()["traceEvents"]
+             if e["ph"] in ("i", "I")]
+    assert names.count("alert.fire") == 1
+    assert names.count("alert.resolve") == 1
+
+
+def test_default_rules_are_uniquely_named():
+    rules = default_rules(1.0)
+    names = [r.name for r in rules]
+    assert len(set(names)) == len(names) == 7
+    with pytest.raises(ValueError):
+        AlertEngine(rules + [ThresholdRule(names[0],
+                                           series_key("nk_x"), bound=1)])
+
+
+def test_watchdog_is_a_metrics_provider():
+    reg = MetricsRegistry()
+    reg.register_provider(lambda: {"nk_x": 1.0}, name="fake")
+    wd = FabricWatchdog(reg, default_rules())
+    wd.tick(0.0)
+    wd.tick(1.0)
+    c = wd.counters()
+    assert c["nk_watchdog_scrapes_total"] == 2.0
+    assert c["nk_watchdog_rules"] == 7.0
+    assert c["nk_alerts_active"] == 0.0
+    with pytest.raises(ValueError):
+        wd.scrape_sequence()                     # not recording
+
+
+# ---------------------------------------------------------------------------
+# scenario precision on the jit-free fakes
+# ---------------------------------------------------------------------------
+
+N_TENANTS = 4
+INTERVALS = 12
+HOG = str(N_TENANTS - 1)
+
+
+def _watched_single(name):
+    _, cap = scenario_spec(name, n_tenants=N_TENANTS, intervals=INTERVALS)
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    return replay_scenario(name, n_tenants=N_TENANTS, intervals=INTERVALS,
+                           engine=eng, watch=True)
+
+
+def _watched_cluster(name, watch=True):
+    _, cap = scenario_spec(name, n_tenants=N_TENANTS, intervals=INTERVALS)
+    cl = make_fake_cluster(3, core_plane=True,
+                           controller=RateController(cap, alpha=0.6))
+    return replay_scenario(name, n_tenants=N_TENANTS, intervals=INTERVALS,
+                           engine=cl, watch=watch)
+
+
+def test_steady_scenario_fires_zero_alerts():
+    rep = _watched_single("steady")
+    assert rep.alerts_fired == 0, rep.alerts_by_rule()
+    assert rep.alerts_active == 0
+    assert rep.watchdog.ticks == INTERVALS + 1
+
+
+def test_adversarial_scenario_pages_the_hog_and_nobody_else():
+    rep = _watched_single("adversarial")
+    by_rule = rep.alerts_by_rule()
+    assert by_rule.get("fairness_burn", 0) >= 1
+    for a in rep.alerts:
+        lbl = dict(a.labels)
+        if "tenant" in lbl:
+            assert lbl["tenant"] == HOG, (a.rule, lbl)
+    hog_fairness = [a for a in rep.alerts if a.rule == "fairness_burn"]
+    assert all(dict(a.labels)["tenant"] == HOG for a in hog_fairness)
+
+
+def test_failover_scenario_fires_and_resolves_engine_dark():
+    rep = _watched_cluster("failover")
+    dark = [a for a in rep.alerts if a.rule == "engine_dark"]
+    assert len(dark) == 1
+    assert dark[0].resolved_at is not None       # recovery resolves it
+    assert dark[0].fired_at < dark[0].resolved_at
+    for a in rep.alerts:                         # nothing blames a victim
+        lbl = dict(a.labels)
+        if "tenant" in lbl:
+            assert lbl["tenant"] == HOG, (a.rule, lbl)
+
+
+def test_stack_swap_scenario_stays_quiet_outside_the_quiesce():
+    rep = _watched_cluster("stack_swap")
+    offscript = [a for a in rep.alerts
+                 if a.rule in ("engine_dark", "telemetry_stalled",
+                               "conservation_drift", "jain_floor",
+                               "parked_engine_leak")
+                 or dict(a.labels).get("tenant") not in (HOG, None)]
+    assert offscript == [], [(a.rule, dict(a.labels)) for a in offscript]
+
+
+def test_recorded_run_replays_offline_to_the_same_alerts():
+    _, cap = scenario_spec("adversarial", n_tenants=N_TENANTS,
+                           intervals=INTERVALS)
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    rep = replay_scenario("adversarial", n_tenants=N_TENANTS,
+                          intervals=INTERVALS, engine=eng, watch="record")
+    live = sorted((a.rule, tuple(a.labels), round(a.fired_at, 6))
+                  for a in rep.alerts)
+    scrapes = read_scrape_sequence(rep.watchdog.scrape_sequence())
+    assert len(scrapes) == INTERVALS + 1
+    interval = nk_watch.infer_interval([ts for ts, _ in scrapes])
+    _, engine, events = nk_watch.replay_alerts(scrapes,
+                                               interval_s=interval)
+    offline = sorted((a.rule, tuple(a.labels), round(ts, 6))
+                     for ts, kind, a in events if kind == "fire")
+    assert offline == live
+
+
+def test_alert_counters_reach_the_replay_report():
+    rep = _watched_single("adversarial")
+    assert rep.alerts_fired == len(rep.alerts)
+    assert rep.alerts_active == sum(1 for a in rep.alerts if a.active)
+    by_rule = rep.alerts_by_rule()
+    assert sum(by_rule.values()) == rep.alerts_fired
+    c = rep.watchdog.counters()
+    assert c["nk_alerts_active"] == float(rep.alerts_active)
+
+
+# ---------------------------------------------------------------------------
+# check_trace: the alert-lifecycle rule
+# ---------------------------------------------------------------------------
+
+
+def _instant(name, ts, **args):
+    return {"name": name, "ph": "i", "ts": ts, "pid": 1, "tid": 1,
+            "args": args}
+
+
+def test_check_trace_accepts_balanced_alert_lifecycle():
+    doc = {"traceEvents": [
+        _instant("alert.fire", 1, rule="deep", severity="page", tenant="3",
+                 value=2.0),
+        _instant("alert.resolve", 2, rule="deep", severity="page",
+                 tenant="3"),
+    ]}
+    assert check_trace_mod.check_trace(doc) == []
+
+
+def test_check_trace_flags_resolve_without_fire_and_double_fire():
+    orphan = {"traceEvents": [
+        _instant("alert.resolve", 1, rule="deep", severity="page",
+                 tenant="3")]}
+    probs = check_trace_mod.check_trace(orphan)
+    assert any("alert.resolve" in p and "without" in p for p in probs)
+    doubled = {"traceEvents": [
+        _instant("alert.fire", 1, rule="deep", severity="page", tenant="3"),
+        _instant("alert.fire", 2, rule="deep", severity="page", tenant="3"),
+    ]}
+    probs = check_trace_mod.check_trace(doubled)
+    assert any("fired" in p and "twice" in p for p in probs)
+    # still-active at end is legal: a recording can stop mid-incident
+    active = {"traceEvents": [
+        _instant("alert.fire", 1, rule="deep", severity="page", tenant="3")]}
+    assert check_trace_mod.check_trace(active) == []
+
+
+def test_watched_failover_trace_passes_the_validator():
+    _, cap = scenario_spec("failover", n_tenants=N_TENANTS,
+                           intervals=INTERVALS)
+    cl = make_fake_cluster(3, core_plane=True,
+                           controller=RateController(cap, alpha=0.6))
+    with trace_to() as tr:
+        rep = replay_scenario("failover", n_tenants=N_TENANTS,
+                              intervals=INTERVALS, engine=cl, watch=True)
+    assert rep.alerts_fired >= 1
+    doc = json.loads(tr.to_json())
+    assert check_trace_mod.check_trace(doc, scenario="failover") == []
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "alert.fire" in names and "alert.resolve" in names
+
+
+def test_steady_trace_contains_no_alert_instants():
+    _, cap = scenario_spec("steady", n_tenants=N_TENANTS,
+                           intervals=INTERVALS)
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    with trace_to() as tr:
+        replay_scenario("steady", n_tenants=N_TENANTS, intervals=INTERVALS,
+                        engine=eng, watch=True)
+    names = {e["name"] for e in tr.chrome_trace()["traceEvents"]}
+    assert not {n for n in names if n.startswith("alert.")}
+
+
+# ---------------------------------------------------------------------------
+# the NaN -> "-" regression (empty latency window is absence, not zero)
+# ---------------------------------------------------------------------------
+
+
+def test_silent_tenant_latency_is_nan_not_zero():
+    trace, cap = scenario_spec("steady", n_tenants=N_TENANTS,
+                               intervals=INTERVALS)
+    trace.loads[0, :] = 0.0                      # tenant 0 never arrives
+    from repro.serve.replay import TraceReplayer
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    rep = TraceReplayer(eng, capacity=cap).run(trace)
+    silent = rep.per_tenant[0]
+    assert math.isnan(silent.p50_admit_wait_s)
+    assert math.isnan(silent.p99_admit_wait_s)
+    busy = rep.per_tenant[1]
+    assert not math.isnan(busy.p99_admit_wait_s)
+
+
+def test_fmt_renders_nan_and_none_as_absence():
+    assert nk_top._fmt(float("nan")) == "-"
+    assert nk_top._fmt(None) == "-"
+    assert nk_top._fmt(0.0, "s") == "0.0ms"      # a real zero still renders
+
+
+# ---------------------------------------------------------------------------
+# the offline tools end to end
+# ---------------------------------------------------------------------------
+
+
+def test_nk_top_diff_renders_reset_aware_rates():
+    old, new = nk_top.demo_scrapes()
+    out = nk_top.render_diff(old, new)
+    assert "reset-aware" in out
+    assert "tok/s" in out
+    assert "migrations/min" in out
+    assert "-60" not in out and " -1" not in out  # never a negative rate
+    # headers carry the timestamps: 1.0s apart
+    assert "diff over 1s" in out
+
+
+def test_nk_top_demo_snapshot_still_renders():
+    text = nk_top.demo_scrape()
+    out = nk_top.render(nk_top.Scrape(parse_prometheus_text(text)))
+    assert "fabric snapshot" in out
+    assert "engine" in out
+
+
+def test_nk_watch_renders_the_timeline(capsys):
+    _, cap = scenario_spec("adversarial", n_tenants=N_TENANTS,
+                           intervals=INTERVALS)
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    rep = replay_scenario("adversarial", n_tenants=N_TENANTS,
+                          intervals=INTERVALS, engine=eng, watch="record")
+    scrapes = read_scrape_sequence(rep.watchdog.scrape_sequence())
+    store, engine, events = nk_watch.replay_alerts(scrapes)
+    out = nk_watch.render(store, engine, events,
+                          nk_watch.infer_interval([t for t, _ in scrapes]))
+    assert "fairness_burn" in out
+    assert "FIRING" in out
+    assert f"tenant={HOG}" in out
+
+
+def test_make_watchdog_requires_a_scrapable_engine():
+    eng = ControlledFakeEngine()                 # no controller attached
+    with pytest.raises(ValueError):
+        make_watchdog(eng)

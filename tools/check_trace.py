@@ -27,7 +27,12 @@ Checks, in order:
   * with ``--scenario stack_swap``: at least one complete hot-swap on
     *each* plane (serve and bytes);
   * with ``--scenario failover``: at least one ``checkpoint`` span, one
-    ``fail`` instant and one ``recover`` span.
+    ``fail`` instant and one ``recover`` span;
+  * any watchdog alert instants are well-formed: per (rule, labels) an
+    ``alert.resolve`` must be preceded by a matching ``alert.fire``,
+    and an active alert never fires twice without resolving in between
+    (alerts still active at the end of the trace are legal — a
+    recording can stop mid-incident).
 
 Stdlib only (runs in CI before any pip install). Exit 1 with a listing
 on any violation.
@@ -64,6 +69,14 @@ def _lifecycle_key(name: str, ph: str) -> str:
     return f"{name}/end" if (name, ph) == ("migrate.drain", "e") else name
 
 
+def _alert_key(args: dict):
+    """Identity of one alert: its rule plus the label args — everything
+    the watchdog attaches except severity and the violating value."""
+    return (args.get("rule"),
+            tuple(sorted((k, str(v)) for k, v in args.items()
+                         if k not in ("rule", "severity", "value"))))
+
+
 def check_trace(doc, scenario=None) -> list:
     problems = []
     events = doc.get("traceEvents")
@@ -78,6 +91,7 @@ def check_trace(doc, scenario=None) -> list:
     swap_planes = set()   # planes with at least one swap.transfer
     checkpointed = set()  # engines with at least one checkpoint span
     open_failed = {}      # engine -> index of the opening fail instant
+    open_alerts = {}      # (rule, labels) -> index of the firing instant
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event {i}: not an object")
@@ -150,6 +164,24 @@ def check_trace(doc, scenario=None) -> list:
                 problems.append(
                     f"event {i}: recover for engine {eng} with no "
                     f"preceding checkpoint span for that engine")
+        # -- watchdog alert lifecycle: resolve needs a prior fire, and
+        # an alert the engine already holds active cannot fire again
+        elif name == "alert.fire" and ph in ("i", "I"):
+            k = _alert_key(args)
+            if k in open_alerts:
+                problems.append(
+                    f"event {i}: alert {k[0]!r} {dict(k[1])} fired "
+                    f"twice without a resolve in between (first fire "
+                    f"at event {open_alerts[k]})")
+            open_alerts[k] = i
+        elif name == "alert.resolve" and ph in ("i", "I"):
+            k = _alert_key(args)
+            if k not in open_alerts:
+                problems.append(
+                    f"event {i}: alert.resolve for {k[0]!r} "
+                    f"{dict(k[1])} without a preceding alert.fire")
+            else:
+                del open_alerts[k]
         elif name == "request.dispatch" and (open_quiesce or open_failed):
             tname = thread_names.get((ev.get("pid"), ev.get("tid")))
             for eng in open_quiesce:

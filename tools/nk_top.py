@@ -2,6 +2,7 @@
 """One-screen fabric snapshot rendered from a Prometheus scrape alone.
 
     PYTHONPATH=src python tools/nk_top.py SCRAPE.txt
+    PYTHONPATH=src python tools/nk_top.py OLD.txt NEW.txt   # diff mode
     PYTHONPATH=src:. python tools/nk_top.py --demo
 
 Reads one text-format export (the output of any ``export_prometheus()``
@@ -16,10 +17,20 @@ scrape-side parser, and renders what an operator wants at a glance:
     ``repro.obs.hist.Histogram.quantile``);
   * the recent live migrations from ``nk_migration_info`` series.
 
+With TWO scrape files the tool switches to diff mode: both are loaded
+into a ``repro.obs.timeseries.SeriesStore`` and rendered as *true
+rates* — tokens/s and bytes/s per tenant, migrations and checkpoints
+per minute — using the store's counter-reset-aware ``rate()``, so a
+restarted engine between the two scrapes reads as a reset, never as a
+negative rate. Scrape timestamps come from a leading ``# SCRAPE ts=``
+header (what ``FabricWatchdog.write_scrapes`` emits) when present,
+else from ``--dt``.
+
 Everything is derived from the scrape text: no handle on the live
 cluster, no side channel. ``--demo`` builds the test suite's jit-free
-fake cluster, drives a migration, exports through a MetricsRegistry,
-and renders that — a self-contained smoke test of the whole path.
+fake cluster, drives a migration, exports through a MetricsRegistry
+twice, and renders the second snapshot plus the diff between them — a
+self-contained smoke test of both paths.
 """
 from __future__ import annotations
 
@@ -36,7 +47,9 @@ def _fmt(v, unit=""):
     if v is None:
         return "-"
     if math.isnan(v):
-        return "NaN"
+        # "no data" (an empty latency window) must render as absence,
+        # not as a number an operator could mistake for a measurement
+        return "-"
     if unit == "s":
         return f"{v * 1e3:.1f}ms" if v < 1.0 else f"{v:.2f}s"
     if abs(v) >= 1e9:
@@ -191,14 +204,95 @@ def render(scrape: Scrape) -> str:
     return "\n".join(lines).rstrip() + "\n"
 
 
-def demo_scrape() -> str:
-    """Drive the jit-free fake cluster and export via a registry."""
+def _scrape_ts(text: str):
+    """Timestamp from a leading ``# SCRAPE ts=`` header, else None."""
+    from repro.obs.slo import SCRAPE_HEADER
+
+    for line in text.splitlines():
+        if line.startswith(SCRAPE_HEADER):
+            try:
+                return float(line[len(SCRAPE_HEADER):].strip())
+            except ValueError:
+                return None
+        if line and not line.startswith("#"):
+            break
+    return None
+
+
+def render_diff(old_text: str, new_text: str, dt: float = 1.0) -> str:
+    """True rates between two scrapes via reset-aware ``rate()``.
+
+    ``dt`` is the spacing used when the scrapes carry no ``# SCRAPE ts=``
+    headers. An engine restart between the scrapes rebaselines (the
+    decrease contributes zero) instead of printing a negative rate."""
+    from repro.obs.timeseries import SeriesStore, series_key
+
+    t0, t1 = _scrape_ts(old_text), _scrape_ts(new_text)
+    if t0 is None or t1 is None or t1 <= t0:
+        t0, t1 = 0.0, float(dt)
+    store = SeriesStore()
+    store.ingest(old_text, ts=t0)
+    store.ingest(new_text, ts=t1)
+    span = t1 - t0
+
+    def rate(name, **labels):
+        key = series_key(name, **labels)
+        return store.rate(key) if store.latest(key) is not None else None
+
+    lines = [f"nk_top — diff over {span:.3g}s (reset-aware rates)", ""]
+
+    fleet = []
+    for label, name, scale, unit in (
+            ("steps/s", "nk_cluster_steps_total", 1.0, "/s"),
+            ("decode steps/s", "nk_cluster_decode_steps_total", 1.0, "/s"),
+            ("migrations/min", "nk_migrations_completed_total", 60.0,
+             "/min"),
+            ("checkpoints/min", "nk_checkpoints_total", 60.0, "/min"),
+            ("recoveries/min", "nk_recoveries_total", 60.0, "/min"),
+            ("bytes freed/s", "nk_bytes_freed_total", 1.0, "B/s")):
+        r = rate(name)
+        if r is not None:
+            fleet.append([label, _fmt(r * scale, unit)])
+    if fleet:
+        lines.append(_table(fleet, ["fleet", "rate"]))
+        lines.append("")
+
+    tenants = sorted(
+        {v for name in ("nk_served_tokens_total", "nk_offered_bytes_total",
+                        "nk_deferred_polls_total")
+         for v in store.label_values(name, "tenant")},
+        key=lambda s: (len(s), s))
+    if tenants:
+        rows = []
+        for t in tenants:
+            rows.append([
+                t,
+                _fmt(rate("nk_served_tokens_total", tenant=t), "tok/s"),
+                _fmt(rate("nk_offered_bytes_total", tenant=t), "B/s"),
+                _fmt(rate("nk_deferred_polls_total", tenant=t), "/s"),
+            ])
+        lines.append(_table(rows, ["tenant", "served", "offered",
+                                   "deferred"]))
+        lines.append("")
+
+    if len(lines) <= 2:
+        lines.append("(no counter series shared by both scrapes)")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def demo_scrapes():
+    """Drive the jit-free fake cluster; export twice via one registry.
+
+    Returns ``(old_text, new_text)`` — snapshots a migration apart, so
+    the diff path renders non-trivial rates."""
+    from repro.control.controller import RateController
     from repro.control.placement import PlacementController
     from repro.obs.metrics import MetricsRegistry
     from repro.serve.scheduler import Request
     from tests.test_placement import make_fake_cluster
 
-    cluster = make_fake_cluster(3)
+    cluster = make_fake_cluster(3, controller=RateController(512.0,
+                                                             alpha=0.6))
     for t in range(4):
         cluster.add_tenant(t)
         for r in range(3):
@@ -206,35 +300,59 @@ def demo_scrape() -> str:
                                    arrival=0.1 * r))
     for i in range(8):
         cluster.step(now=0.1 * (i + 1))
+
+    reg = MetricsRegistry()
+    # the cluster folds its attached autopilot's and controller's
+    # counters into its own export, so one provider covers the fabric
+    reg.register_provider(cluster, name="cluster")
+    old = f"# SCRAPE ts=0.8\n{reg.export_prometheus()}"
+
+    # a second wave of traffic between the snapshots, so the diff
+    # renders non-zero per-tenant served rates
+    for t in range(4):
+        for r in range(3):
+            cluster.submit(Request(t, [1, 2], 4, req_id=100 + 10 * t + r,
+                                   arrival=1.0 + 0.1 * r))
     cluster.migrate(0, (cluster.placement[0] + 1) % 3, now=1.0)
     for i in range(8):
         cluster.step(now=1.0 + 0.1 * (i + 1))
     pilot = PlacementController(cluster, policy="spread_hot")
     cluster.attach_autopilot(pilot)
     pilot.tick(now=3.0)
+    new = f"# SCRAPE ts=1.8\n{reg.export_prometheus()}"
+    return old, new
 
-    reg = MetricsRegistry()
-    # the cluster folds its attached autopilot's counters into its own
-    # export, so one provider covers the whole fabric
-    reg.register_provider(cluster, name="cluster")
-    return reg.export_prometheus()
+
+def demo_scrape() -> str:
+    """The second demo snapshot (single-scrape rendering path)."""
+    return demo_scrapes()[1]
 
 
 def main(argv=None) -> int:
     from repro.obs.metrics import parse_prometheus_text
 
     ap = argparse.ArgumentParser(
-        description="render a fabric snapshot from a Prometheus scrape")
+        description="render a fabric snapshot from a Prometheus scrape, "
+                    "or true rates from two")
     ap.add_argument("scrape", nargs="?", type=pathlib.Path,
                     help="text-format export to render")
+    ap.add_argument("scrape2", nargs="?", type=pathlib.Path,
+                    help="second (newer) scrape: render the diff as rates")
     ap.add_argument("--demo", action="store_true",
-                    help="drive the fake cluster and render its export")
+                    help="drive the fake cluster and render its export "
+                         "(snapshot + diff)")
+    ap.add_argument("--dt", type=float, default=1.0,
+                    help="seconds between the two scrapes when they carry "
+                         "no '# SCRAPE ts=' headers (default 1.0)")
     args = ap.parse_args(argv)
     if args.demo:
-        text = demo_scrape()
+        old_text, text = demo_scrapes()
     elif args.scrape is not None:
         try:
             text = args.scrape.read_text()
+            old_text = None
+            if args.scrape2 is not None:
+                old_text, text = text, args.scrape2.read_text()
         except OSError as e:
             print(f"unreadable scrape: {e}")
             return 1
@@ -245,6 +363,15 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"scrape does not parse: {e}")
         return 1
+    if old_text is not None:
+        try:
+            sys.stdout.write(render_diff(old_text, text, dt=args.dt))
+        except ValueError as e:
+            print(f"old scrape does not parse: {e}")
+            return 1
+        if not args.demo:
+            return 0
+        sys.stdout.write("\n")
     sys.stdout.write(render(Scrape(series)))
     return 0
 

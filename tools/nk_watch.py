@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Offline fabric watchdog: replay a recorded scrape sequence to alerts.
+
+    PYTHONPATH=src python tools/nk_watch.py SCRAPES.txt
+    PYTHONPATH=src:. python tools/nk_watch.py --demo
+
+Reads the artifact ``FabricWatchdog.write_scrapes`` dumps (each scrape
+prefixed ``# SCRAPE ts=<t>``, terminated ``# EOF``), feeds the scrapes
+through a fresh ``SeriesStore`` + ``AlertEngine`` in timestamp order,
+and renders what an on-call wants from an incident bundle:
+
+  * the alert timeline — every fire/resolve with rule, severity, labels
+    and the violating value, in the order the watchdog saw them;
+  * the alerts still active at the end of the recording;
+  * the final burn rates for every burn-rate rule (fast and slow
+    window), so "how close were the quiet tenants to paging" is visible
+    next to the one that did.
+
+The rule windows are sized from the recording itself (median scrape
+spacing) unless ``--interval`` pins them, so an artifact recorded at
+any cadence replays with the same windows-per-scrape geometry the live
+watchdog used. Same contract as ``tools/nk_top.py``: everything is
+derived from the artifact text, no handle on a live fabric. ``--demo``
+replays the adversarial scenario with a recording watchdog attached and
+renders the resulting artifact — a self-contained smoke test of the
+whole record -> replay -> alert path.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def _table(rows, headers):
+    rows = [headers] + [[str(c) for c in r] for r in rows]
+    widths = [max(len(r[i]) for r in rows) for i in range(len(headers))]
+    out = []
+    for j, r in enumerate(rows):
+        out.append("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+        if j == 0:
+            out.append("  ".join("-" * w for w in widths))
+    return "\n".join(out)
+
+
+def _labels(labels) -> str:
+    return ",".join(f"{k}={v}" for k, v in labels) or "-"
+
+
+def infer_interval(times) -> float:
+    """Median spacing between scrapes; 1.0 when undeterminable."""
+    gaps = sorted(b - a for a, b in zip(times, times[1:]) if b > a)
+    return gaps[len(gaps) // 2] if gaps else 1.0
+
+
+def replay_alerts(scrapes, rules=None, interval_s=None):
+    """Feed ``[(ts, text), ...]`` through a fresh store + alert engine.
+
+    Returns ``(store, engine, events)`` where ``events`` is the flat
+    ``[(ts, "fire"|"resolve", Alert), ...]`` timeline."""
+    from repro.obs.slo import AlertEngine, default_rules
+    from repro.obs.timeseries import SeriesStore
+
+    if interval_s is None:
+        interval_s = infer_interval([ts for ts, _ in scrapes])
+    store = SeriesStore()
+    engine = AlertEngine(default_rules(interval_s)
+                         if rules is None else rules)
+    events = []
+    for ts, text in sorted(scrapes):
+        store.ingest(text, ts)
+        for kind, alert in engine.evaluate(store, ts):
+            events.append((ts, kind, alert))
+    return store, engine, events
+
+
+def render(store, engine, events, interval_s) -> str:
+    from repro.obs.slo import BurnRateRule
+
+    times = store.times()
+    span = (times[-1] - times[0]) if len(times) > 1 else 0.0
+    lines = [f"nk_watch — {store.scrapes} scrapes over {span:.3g}s, "
+             f"{len(engine.rules)} rules (interval {interval_s:.3g}s)",
+             ""]
+
+    if events:
+        rows = [[f"{ts:.2f}", kind.upper(), a.rule, a.severity,
+                 _labels(a.labels),
+                 f"{a.value:.3f}" if kind == "fire" else ""]
+                for ts, kind, a in events]
+        lines.append(_table(rows, ["time", "event", "rule", "sev",
+                                   "labels", "value"]))
+    else:
+        lines.append("no alerts fired — the fabric held its SLOs")
+    lines.append("")
+
+    if engine.active:
+        rows = [[a.rule, a.severity, _labels(a.labels),
+                 f"{a.fired_at:.2f}", f"{a.value:.3f}"]
+                for _, a in sorted(engine.active.items())]
+        lines.append("still active at end of recording:")
+        lines.append(_table(rows, ["rule", "sev", "labels", "since",
+                                   "value"]))
+        lines.append("")
+
+    now = times[-1] if times else 0.0
+    for rule in engine.rules:
+        if not isinstance(rule, BurnRateRule):
+            continue
+        burns = rule.burn_rates(store, now)
+        if not burns:
+            continue
+        lines.append(
+            f"{rule.name} @ t={now:.2f} (objective "
+            f"{rule.spec.objective:g}, fires past {rule.burn_threshold:g}"
+            f" on both windows):")
+        rows = [[k, f"{bf:.2f}", f"{bs:.2f}",
+                 "FIRING" if (rule.name, ((rule.key, k),)) in engine.active
+                 else ""]
+                for k, (bf, bs) in sorted(burns.items(),
+                                          key=lambda i: (len(i[0]), i[0]))]
+        lines.append(_table(rows, [rule.key, "burn_fast", "burn_slow",
+                                   "state"]))
+        lines.append("")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def demo_sequence() -> str:
+    """Replay the adversarial scenario with a recording watchdog and
+    return its scrape-sequence artifact."""
+    from repro.control.controller import RateController
+    from repro.serve.replay import replay_scenario, scenario_spec
+    from tests.test_placement import ControlledFakeEngine
+
+    _, cap = scenario_spec("adversarial", n_tenants=4, intervals=12)
+    eng = ControlledFakeEngine()
+    ctrl = RateController(cap, alpha=0.6, push_mode="full")
+    ctrl.attach_scheduler(eng.scheduler)
+    eng.controller = ctrl
+    rep = replay_scenario("adversarial", n_tenants=4, intervals=12,
+                          engine=eng, watch="record")
+    return rep.watchdog.scrape_sequence()
+
+
+def main(argv=None) -> int:
+    from repro.obs.slo import read_scrape_sequence
+
+    ap = argparse.ArgumentParser(
+        description="replay a recorded scrape sequence into an alert "
+                    "timeline and burn rates")
+    ap.add_argument("scrapes", nargs="?", type=pathlib.Path,
+                    help="scrape-sequence artifact "
+                         "(FabricWatchdog.write_scrapes output)")
+    ap.add_argument("--interval", type=float, default=None,
+                    help="rule-window scrape interval in seconds "
+                         "(default: median spacing in the recording)")
+    ap.add_argument("--demo", action="store_true",
+                    help="record the adversarial replay scenario and "
+                         "render its artifact")
+    args = ap.parse_args(argv)
+    if args.demo:
+        text = demo_sequence()
+    elif args.scrapes is not None:
+        try:
+            text = args.scrapes.read_text()
+        except OSError as e:
+            print(f"unreadable artifact: {e}")
+            return 1
+    else:
+        ap.error("need a SCRAPES file or --demo")
+    try:
+        scrapes = read_scrape_sequence(text)
+    except ValueError as e:
+        print(f"artifact does not parse: {e}")
+        return 1
+    if not scrapes:
+        print("artifact holds no scrapes")
+        return 1
+    interval = args.interval if args.interval is not None \
+        else infer_interval([ts for ts, _ in scrapes])
+    store, engine, events = replay_alerts(scrapes, interval_s=interval)
+    sys.stdout.write(render(store, engine, events, interval))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
