@@ -1,0 +1,233 @@
+"""Control-plane scale bench: the fused tick vs the object control plane.
+
+NetKernel's pitch is fleet-level management by the operator; ROADMAP.md's
+north star is 1M tenants. The control plane gets there only if one control
+interval costs O(1) Python work, not O(tenants) object traffic — this
+bench measures exactly that boundary:
+
+  object      a real TenantScheduler + RateController (SchedulerTelemetry
+              EWMA dicts, WaterFill/max_min_fair over dicts, TokenBucket
+              set_rate per tenant) driven by a synthetic counter trace.
+  vectorized  the same tick fused: VectorizedControlPlane — refill +
+              EWMA + admission headroom + bisection water-fill + bucket
+              retarget as ONE jitted step over flat arrays.
+
+Per population size (1k / 10k / 100k tenants) it reports µs/tick for each
+backend, the speedup, control-tick throughput in tenants/s, and the bytes
+of control state touched per tick. A parity probe replays an identical
+counter trace through both backends and asserts the allocations agree
+within 1e-6 x capacity (``equal_allocations``).
+
+Run: PYTHONPATH=src python benchmarks/bench_control_scale.py [--smoke]
+     [--json OUT.json]
+
+``--smoke`` is the CI bench-smoke variant (fewer timed ticks, object
+backend capped at 10k — its 100k tick costs seconds by construction).
+Thresholds live in benchmarks/bench_thresholds.json; control-plane
+regressions fail CI exactly like fairness regressions do
+(tools/check_bench.py). Exit status 1 if any claim fails.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+CAPACITY = 1_000_000.0     # tokens/s across the population
+DT = 1.0                   # control interval (virtual seconds)
+BACKLOG_FRAC = 0.1         # fraction of tenants with queue depth
+
+
+def _trace(n: int, seed: int = 0):
+    """Synthetic per-tenant demand: weights, per-tick served increments
+    (integers — cumulative counters), and the backlogged subset."""
+    rng = np.random.default_rng(seed)
+    weights = rng.choice([1.0, 2.0, 4.0], size=n).astype(np.float64)
+    rates = rng.uniform(0.2, 2.0, size=n) * (CAPACITY / n)
+    steps = np.maximum(np.round(rates * DT), 1.0)
+    backlogged = rng.random(n) < BACKLOG_FRAC
+    return weights, steps, backlogged
+
+
+def _object_harness(n: int, weights, backlogged):
+    """A real TenantScheduler + RateController wired the production way;
+    served counters are advanced directly (the data plane is synthetic,
+    the control plane is the genuine article)."""
+    from repro.control.controller import RateController
+    from repro.serve.scheduler import TenantScheduler
+
+    sched = TenantScheduler(policy="wfq", charge_prompt=True)
+    ctrl = RateController(CAPACITY,
+                          weights={t: float(weights[t]) for t in range(n)},
+                          alpha=0.5, push_mode="full")
+    ctrl.attach_scheduler(sched)
+    for t in range(n):
+        sched.add_tenant(t, weight=float(weights[t]))
+        if backlogged[t]:
+            sched.queues[t].append(None)   # pending() counts length only
+    return sched, ctrl
+
+
+def _vec_harness(n: int, weights):
+    from repro.control.vectorized import VectorizedControlPlane
+
+    plane = VectorizedControlPlane(CAPACITY, alpha=0.5, headroom=1.25,
+                                   scheduler_buckets=True)
+    for t in range(n):
+        plane.add_tenant(t, weight=float(weights[t]))
+    return plane
+
+
+def _time_object(n: int, ticks: int, warmup: int = 2):
+    weights, steps, backlogged = _trace(n)
+    sched, ctrl = _object_harness(n, weights, backlogged)
+    served = np.zeros(n)
+    now = 0.0
+    for _ in range(warmup):
+        served += steps
+        for t in range(n):
+            sched.served_tokens[t] = int(served[t])
+        ctrl.tick(now)
+        now += DT
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        served += steps
+        for t in range(n):
+            sched.served_tokens[t] = int(served[t])
+        ctrl.tick(now)
+        now += DT
+    wall = time.perf_counter() - t0
+    # the counter bump is the synthetic data plane, not control cost;
+    # subtract its measured price so the object backend isn't overbilled
+    b0 = time.perf_counter()
+    for _ in range(ticks):
+        for t in range(n):
+            sched.served_tokens[t] = int(served[t])
+    bump = time.perf_counter() - b0
+    return max(wall - bump, 1e-9) / ticks, ctrl
+
+
+def _time_vec(n: int, ticks: int, warmup: int = 3):
+    weights, steps, backlogged = _trace(n)
+    plane = _vec_harness(n, weights)
+    size = plane.index.size
+    queue = np.where(backlogged, 1.0, 0.0)
+    served = np.zeros(size)
+    now = 0.0
+    for _ in range(warmup):
+        served = served + steps
+        plane.tick(served, queue=queue, now=now)
+        now += DT
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        served = served + steps
+        plane.tick(served, queue=queue, now=now)
+        now += DT
+    wall = time.perf_counter() - t0
+    return wall / ticks, plane
+
+
+def _parity(n: int, ticks: int = 5) -> float:
+    """Replay one identical counter trace through both backends; 1.0 iff
+    every tenant's final allocation agrees within 1e-6 x capacity."""
+    weights, steps, backlogged = _trace(n)
+    sched, ctrl = _object_harness(n, weights, backlogged)
+    plane = _vec_harness(n, weights)
+    queue = np.where(backlogged, 1.0, 0.0)
+    served = np.zeros(n)
+    now = 0.0
+    for _ in range(ticks):
+        served += steps
+        for t in range(n):
+            sched.served_tokens[t] = int(served[t])
+        ctrl.tick(now)
+        plane.tick(served, queue=queue, now=now)
+        now += DT
+    vec = plane.allocations()
+    if set(ctrl.allocations) != set(vec):
+        return 0.0
+    worst = max(abs(ctrl.allocations[t] - vec[t]) for t in ctrl.allocations)
+    return 1.0 if worst <= 1e-6 * CAPACITY else 0.0
+
+
+def run_scale(n: int, *, label: str, vec_ticks: int, obj_ticks: int,
+              parity: bool, smoke: bool):
+    rows = []
+    vec_s, plane = _time_vec(n, vec_ticks)
+    tenants_per_s = n / vec_s
+    state_bytes = plane.state_bytes()
+    rows += [(f"{label},vec_us_per_tick", vec_s * 1e6),
+             (f"{label},vec_tenants_per_s", tenants_per_s),
+             (f"{label},state_bytes_per_tick", float(state_bytes)),
+             (f"{label},state_bytes_per_tenant", state_bytes / n)]
+    ok = tenants_per_s >= 1e6
+    claim = (f"{n} tenants: fused tick {vec_s * 1e6:.0f}us "
+             f"({tenants_per_s / 1e6:.1f}M tenants/s, "
+             f"{state_bytes / n:.0f} B/tenant)")
+    if obj_ticks:
+        obj_s, _ = _time_object(n, obj_ticks)
+        speedup = obj_s / vec_s
+        rows += [(f"{label},object_us_per_tick", obj_s * 1e6),
+                 (f"{label},speedup_x", speedup)]
+        floor = 5.0 if n <= 1000 else 50.0
+        ok = ok and speedup >= floor
+        claim += (f"; object {obj_s * 1e6:.0f}us -> {speedup:.0f}x "
+                  f"(>= {floor:.0f}x)")
+    if parity:
+        eq = _parity(min(n, 1000 if smoke else n))
+        rows.append((f"{label},equal_allocations", eq))
+        ok = ok and eq >= 1.0
+        claim += f"; allocations match within 1e-6 x capacity: {eq == 1.0}"
+    return {"rows": rows, "ok": ok, "claim": claim}
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    json_out = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            raise SystemExit("--json needs a value")
+        json_out = argv[i + 1]
+    scales = [
+        # (n, label, vec_ticks, obj_ticks, parity)
+        (1_000, "control_scale_1k", 20 if smoke else 50,
+         5 if smoke else 10, True),
+        (10_000, "control_scale_10k", 10 if smoke else 30,
+         3 if smoke else 5, not smoke),
+        (100_000, "control_scale_100k", 5 if smoke else 10, 0, False),
+    ]
+    print("name,value")
+    failures, results = 0, []
+    for n, label, vt, ot, par in scales:
+        out = run_scale(n, label=label, vec_ticks=vt, obj_ticks=ot,
+                        parity=par, smoke=smoke)
+        for name, value in out["rows"]:
+            print(f"{name},{value:.4f}")
+        status = "PASS" if out["ok"] else "FAIL"
+        print(f"{label},{status}: {out['claim']}", file=sys.stderr)
+        failures += 0 if out["ok"] else 1
+        results.append({"bench": label, "ok": out["ok"],
+                        "claim": out["claim"],
+                        "metrics": {nm: v for nm, v in out["rows"]}})
+    if json_out:
+        doc = {"ok": failures == 0,
+               "suite": "control_scale_smoke" if smoke else "control_scale",
+               "results": results,
+               "metrics": {nm: v for r in results
+                           for nm, v in r["metrics"].items()}}
+        pathlib.Path(json_out).write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"wrote {json_out}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -167,10 +167,17 @@ ALL = (run_convergence, run_isolation, run_backfill)
 E2E_TENANTS = 4
 E2E_INTERVALS = 18
 
+# control-plane backend for every e2e engine/cluster this process builds:
+# "object" (per-tenant Python state) or "vectorized" (flat-array telemetry
+# banks, BucketStore admission buckets, the fused jitted water-fill).
+# Set by --backend; the e2e claims must hold under either.
+BACKEND = "object"
+
 
 def _e2e_report(trace, capacity, push_mode="full"):
     from repro.serve.replay import TraceReplayer, make_replay_engine
-    eng = make_replay_engine(capacity=capacity, push_mode=push_mode)
+    eng = make_replay_engine(capacity=capacity, push_mode=push_mode,
+                             backend=BACKEND)
     return TraceReplayer(eng, capacity=capacity).run(trace)
 
 
@@ -267,7 +274,8 @@ def run_e2e_multi_engine(engines: int = 3) -> Dict:
     base_trace = adversarial_baseline(trace)
 
     def run(tr, events=None):
-        cl = make_replay_cluster(capacity=cap, engines=engines)
+        cl = make_replay_cluster(capacity=cap, engines=engines,
+                                 backend=BACKEND)
         return TraceReplayer(cl, capacity=cap).run(tr, events=events), cl
 
     base, _ = run(base_trace)
@@ -329,7 +337,8 @@ def _autopilot_cluster(capacity, engines, policy):
     conservation-checks) both planes."""
     from repro.serve.replay import make_replay_cluster
     return make_replay_cluster(capacity=capacity, engines=engines,
-                               autopilot=policy, core_plane=True)
+                               autopilot=policy, core_plane=True,
+                               backend=BACKEND)
 
 
 def _byte_pump(cluster, op_bytes=4096):
@@ -518,7 +527,7 @@ def run_e2e_stack_swap(engines: int = 3,
 
     def run(with_swaps):
         cl = make_replay_cluster(capacity=cap, engines=engines,
-                                 core_plane=True)
+                                 core_plane=True, backend=BACKEND)
         pump, pumped = _byte_pump(cl)
         events = [(i, pump) for i in range(intervals)]
         if with_swaps:
@@ -587,7 +596,7 @@ def run_e2e_failover(engines: int = 3,
     trace, cap = scenario_spec("failover", n_tenants=n,
                                intervals=intervals)
     cl = make_replay_cluster(capacity=cap, engines=engines,
-                             core_plane=True)
+                             core_plane=True, backend=BACKEND)
     op_bytes = 4096
     pump, pumped = _byte_pump(cl, op_bytes=op_bytes)
     rep = TraceReplayer(cl, capacity=cap).run(
@@ -764,16 +773,17 @@ def run_e2e_watchdog(engines: int = 3,
     hog = str(n - 1)
 
     t0 = time.perf_counter()
-    replay_scenario("steady", n_tenants=n, intervals=intervals)
+    replay_scenario("steady", n_tenants=n, intervals=intervals,
+                    backend=BACKEND)
     base_wall = time.perf_counter() - t0
     steady = replay_scenario("steady", n_tenants=n, intervals=intervals,
-                             watch=True)
+                             watch=True, backend=BACKEND)
     adv = replay_scenario("adversarial", n_tenants=n, intervals=intervals,
-                          watch=True)
+                          watch=True, backend=BACKEND)
     fail = replay_scenario("failover", n_tenants=n, intervals=intervals,
-                           engines=engines, watch="record")
+                           engines=engines, watch="record", backend=BACKEND)
     swap = replay_scenario("stack_swap", n_tenants=n, intervals=intervals,
-                           engines=engines, watch=True)
+                           engines=engines, watch=True, backend=BACKEND)
     _WATCHDOG_REPORTS.update(steady=steady, adversarial=adv,
                              failover=fail, stack_swap=swap)
 
@@ -855,9 +865,10 @@ def _parse_args(argv):
     opts = {"e2e": "--e2e" in argv, "smoke": "--smoke" in argv,
             "autopilot": "--autopilot" in argv, "engines": 1,
             "json": None, "trace": None, "swap-trace": None,
-            "failover-trace": None, "alerts": None, "scrapes": None}
+            "failover-trace": None, "alerts": None, "scrapes": None,
+            "backend": "object"}
     for flag in ("--engines", "--json", "--trace", "--swap-trace",
-                 "--failover-trace", "--alerts", "--scrapes"):
+                 "--failover-trace", "--alerts", "--scrapes", "--backend"):
         if flag in argv:
             i = argv.index(flag)
             if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
@@ -886,11 +897,19 @@ def _parse_args(argv):
     if (opts["alerts"] or opts["scrapes"]) and not opts["autopilot"]:
         raise SystemExit("--alerts/--scrapes dump the watchdog claim's "
                          "artifacts: add --e2e --autopilot")
+    if opts["backend"] not in ("object", "vectorized"):
+        raise SystemExit(f"--backend must be 'object' or 'vectorized', "
+                         f"got {opts['backend']!r}")
+    if opts["backend"] != "object" and not opts["e2e"]:
+        raise SystemExit("--backend selects the e2e control plane: "
+                         "add --e2e")
     return opts
 
 
 def main(argv=None) -> None:
+    global BACKEND
     opts = _parse_args(sys.argv[1:] if argv is None else argv)
+    BACKEND = opts["backend"]
     intervals = SMOKE_INTERVALS if opts["smoke"] else E2E_INTERVALS
     benches = []
     if not opts["smoke"]:
@@ -931,7 +950,8 @@ def main(argv=None) -> None:
         from repro.serve.replay import replay_scenario
         replay_scenario("migration", n_tenants=E2E_TENANTS,
                         intervals=max(intervals, SMOKE_INTERVALS),
-                        trace_path=opts["trace"])
+                        trace_path=opts["trace"],
+                        backend=BACKEND)
         print(f"wrote {opts['trace']} (migration scenario trace)",
               file=sys.stderr)
     if opts["swap-trace"]:
@@ -941,7 +961,8 @@ def main(argv=None) -> None:
         from repro.serve.replay import replay_scenario
         replay_scenario("stack_swap", n_tenants=E2E_TENANTS,
                         intervals=max(intervals, SMOKE_INTERVALS),
-                        trace_path=opts["swap-trace"])
+                        trace_path=opts["swap-trace"],
+                        backend=BACKEND)
         print(f"wrote {opts['swap-trace']} (stack_swap scenario trace)",
               file=sys.stderr)
     if opts["failover-trace"]:
@@ -951,7 +972,8 @@ def main(argv=None) -> None:
         from repro.serve.replay import replay_scenario
         replay_scenario("failover", n_tenants=E2E_TENANTS,
                         intervals=max(intervals, SMOKE_INTERVALS),
-                        trace_path=opts["failover-trace"])
+                        trace_path=opts["failover-trace"],
+                        backend=BACKEND)
         print(f"wrote {opts['failover-trace']} (failover scenario trace)",
               file=sys.stderr)
     if opts["alerts"]:
@@ -989,6 +1011,7 @@ def main(argv=None) -> None:
         doc = {"ok": failures == 0,
                "suite": ("smoke" if opts["smoke"] else
                          "e2e" if opts["e2e"] else "fluid"),
+               "backend": opts["backend"],
                "engines": opts["engines"],
                "intervals": intervals if opts["e2e"] else None,
                "results": results,

@@ -41,8 +41,10 @@ def max_min_fair(capacity: float, demands: Mapping[int, float],
     alloc = {t: 0.0 for t in demands}
     active = {t for t, d in demands.items() if d > 0 and w[t] > 0}
     remaining = float(capacity)
-    while active and remaining > 1e-12:
-        wsum = sum(w[t] for t in active)
+    # maintained incrementally as tenants are satisfied: each round is
+    # O(active), not O(active^2) across rounds
+    wsum = sum(w[t] for t in active)
+    while active and remaining > 1e-12 and wsum > 1e-300:
         share = remaining / wsum            # capacity per unit weight
         satisfied = {t for t in active if demands[t] <= w[t] * share + 1e-12}
         if not satisfied:
@@ -54,6 +56,7 @@ def max_min_fair(capacity: float, demands: Mapping[int, float],
         for t in satisfied:
             alloc[t] = float(demands[t])
             remaining -= demands[t]
+            wsum -= w[t]
         active -= satisfied
     return alloc
 
@@ -78,13 +81,20 @@ class WaterFill(CongestionControl):
     bids ``inf`` and receives a fair share of the residual. A satisfied
     tenant bids its observed offered rate times ``headroom`` so its
     allocation can track demand growth between intervals.
+
+    ``backend="vectorized"`` runs the fill as one jitted array op
+    (``repro.kernels.ops.water_fill``) instead of the scalar loop —
+    same allocations within 1e-6 x capacity, flat cost per tenant.
     """
 
     def __init__(self, weights: Optional[Mapping[int, float]] = None,
-                 headroom: float = 1.25, min_rate: float = 0.0):
+                 headroom: float = 1.25, min_rate: float = 0.0,
+                 backend: str = "object"):
+        from repro.control.vectorized import check_backend
         self.weights = dict(weights or {})
         self.headroom = headroom
         self.min_rate = min_rate
+        self.backend = check_backend(backend)
 
     def allocate(self, obs, capacity):
         # deferral is EWMA-smoothed, so it decays toward zero but never
@@ -95,7 +105,11 @@ class WaterFill(CongestionControl):
         demands = {t: (INF if (o.deferred > eps or o.queue > 0)
                        else o.offered * self.headroom)
                    for t, o in obs.items()}
-        alloc = max_min_fair(capacity, demands, self.weights)
+        if self.backend == "vectorized":
+            from repro.control.vectorized import waterfill_allocate
+            alloc = waterfill_allocate(demands, capacity, self.weights)
+        else:
+            alloc = max_min_fair(capacity, demands, self.weights)
         if self.min_rate > 0:
             alloc = {t: max(r, self.min_rate) for t, r in alloc.items()}
         return alloc

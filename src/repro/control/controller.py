@@ -47,7 +47,7 @@ class RateController:
                  weights: Optional[Dict[int, float]] = None,
                  alpha: float = 0.5, burst_s: float = 0.25,
                  push_mode: str = "full", delta_tol: float = 0.05,
-                 refresh_every: int = 32):
+                 refresh_every: int = 32, backend: str = "object"):
         """``capacity``: the ONE shared bottleneck in units/s — bytes/s
         when the enforcement points are CoreEngines, tokens/s when they
         are TenantSchedulers (don't mix units under one controller).
@@ -56,12 +56,18 @@ class RateController:
         ``burst_s``: pushed bucket burst, in seconds' worth of the
         allocated rate. ``delta_tol``: relative move that makes a target
         worth pushing in delta mode; ``refresh_every``: ticks between
-        delta-mode full re-pushes (soft-state bound)."""
+        delta-mode full re-pushes (soft-state bound). ``backend``:
+        "object" keeps per-tenant control state in Python objects,
+        "vectorized" in flat arrays (telemetry EWMA banks + the jitted
+        array water-fill) — same allocations, flat cost per tenant."""
+        from repro.control.vectorized import check_backend
         if push_mode not in ("full", "delta"):
             raise ValueError(f"push_mode must be 'full' or 'delta', "
                              f"got {push_mode!r}")
         self.capacity = float(capacity)
-        self.algo = algo if algo is not None else WaterFill(weights)
+        self.backend = check_backend(backend)
+        self.algo = algo if algo is not None \
+            else WaterFill(weights, backend=backend)
         self.alpha = alpha
         self.burst_s = burst_s
         # delta mode: only tenants whose per-point allocation moved beyond
@@ -82,6 +88,9 @@ class RateController:
         self.allocations: Dict[int, float] = {}
         self.history: List[Dict[int, float]] = []
         self.ticks = 0
+        self.tick_calls = 0
+        self.tick_seconds_total = 0.0
+        self.last_tenants = 0
 
     # -- wiring -------------------------------------------------------------
     def attach_engine(self, engine, axes: Optional[Iterable[str]] = None):
@@ -89,7 +98,8 @@ class RateController:
         ``axes``: restrict telemetry to CommOps intersecting these mesh
         axes (None = meter everything). Returns self for chaining."""
         self._engines.append(
-            (engine, EngineTelemetry(engine, self.alpha, axes)))
+            (engine, EngineTelemetry(engine, self.alpha, axes,
+                                     backend=self.backend)))
         return self
 
     def attach_scheduler(self, scheduler):
@@ -97,7 +107,8 @@ class RateController:
         Several schedulers may share this controller's one ``capacity`` —
         the multi-engine cluster case. Returns self for chaining."""
         self._schedulers.append(
-            (scheduler, SchedulerTelemetry(scheduler, self.alpha)))
+            (scheduler, SchedulerTelemetry(scheduler, self.alpha,
+                                           backend=self.backend)))
         return self
 
     def detach_scheduler(self, scheduler) -> None:
@@ -129,6 +140,30 @@ class RateController:
         for key in [k for k in self._last_push if k[2] == tenant]:
             del self._last_push[key]
 
+    def evict_tenant(self, tenant: int) -> None:
+        """Drop a departed tenant's control state from every enforcement
+        point that no longer holds it (telemetry EWMA + counter baseline
+        + push history + allocation). Wired from the cluster's
+        drop/migration-finalize paths — without it, telemetry EWMA maps
+        grew one entry per tenant that ever existed. Points that still
+        hold the tenant (migration source that only moved one of two
+        planes, say) keep their live telemetry untouched."""
+        self.invalidate_tenant(tenant)
+        anywhere = False
+        for engine, tel in self._engines:
+            holds = getattr(engine, "has_tenant", None)
+            if holds is not None and holds(tenant):
+                anywhere = True
+            else:
+                tel.evict_tenant(tenant)
+        for scheduler, tel in self._schedulers:
+            if tenant in getattr(scheduler, "queues", {}):
+                anywhere = True
+            else:
+                tel.evict_tenant(tenant)
+        if not anywhere:
+            self.allocations.pop(tenant, None)
+
     # -- observation --------------------------------------------------------
     def observe(self, now: Optional[float] = None) -> Dict[int, TenantObs]:
         """Sample every attached enforcement point at time ``now`` (seconds)
@@ -145,12 +180,16 @@ class RateController:
         ``now``: seconds (virtual or wall clock; defaults to wall clock).
         Returns the global per-tenant allocations in units/s ({} until the
         first interval with a usable rate signal)."""
+        t0 = time.perf_counter()
         now = time.monotonic() if now is None else now
         merged = self.observe(now)
+        self.tick_calls += 1
+        self.last_tenants = len(merged)
         if not merged or not any(o.offered > 0 or o.queue > 0
                                  for o in merged.values()):
             # no rate signal yet (first tick only baselines the counters):
             # pushing allocations computed from zeros would stall everyone
+            self.tick_seconds_total += time.perf_counter() - t0
             return {}
         self.allocations = self.algo.allocate(merged, self.capacity)
         calls_before = self.push_calls
@@ -162,6 +201,7 @@ class RateController:
                 calls=self.push_calls - calls_before)
         self.history.append(dict(self.allocations))
         self.ticks += 1
+        self.tick_seconds_total += time.perf_counter() - t0
         return self.allocations
 
     def _changed(self, kind: str, idx: int, tenant: int, rate: float) -> bool:
@@ -228,7 +268,12 @@ class RateController:
                                  "controller_push_calls_total":
                                      self.push_calls,
                                  "controller_push_skipped_total":
-                                     self.push_skipped}
+                                     self.push_skipped,
+                                 "nk_control_ticks_total": self.tick_calls,
+                                 "nk_control_tick_seconds_total":
+                                     self.tick_seconds_total,
+                                 "nk_control_tenants":
+                                     float(self.last_tenants)}
         for t, r in sorted(self.allocations.items()):
             out[f'nk_allocated_rate{{tenant="{t}"}}'] = r
         for _, tel in self._engines + self._schedulers:

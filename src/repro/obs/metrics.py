@@ -54,6 +54,10 @@ METRIC_HELP: Dict[str, str] = {
     "controller_capacity": "Enforced bottleneck capacity (units/s)",
     "controller_push_calls_total": "set_rate/update_tenant_rate calls issued",
     "controller_push_skipped_total": "Delta-mode pushes skipped (unchanged)",
+    "nk_control_ticks_total": "Controller tick() calls (incl. baselining)",
+    "nk_control_tick_seconds_total":
+        "Wall seconds spent inside controller ticks",
+    "nk_control_tenants": "Tenant population covered by the last tick",
     "nk_allocated_rate": "Per-tenant allocated rate (units/s)",
     "nk_offered_bytes_total": "Collective bytes offered per tenant and axes",
     "nk_deferred_bytes_total": "Over-rate collective bytes deferred",

@@ -1184,6 +1184,12 @@ class EngineCluster:
         rec.finalized_step = self.steps
         self.migrations_completed += 1
         self.assert_ledger_conservation(rec.tenant)
+        if self.controller is not None:
+            # the source no longer holds the tenant: drop its telemetry
+            # EWMA/baseline state there (the destination, which does hold
+            # it, is left untouched) — without this, every migration
+            # leaked the tenant's control state on the source forever
+            self.controller.evict_tenant(rec.tenant)
         if tracing.TRACER.enabled:
             ts = self._trace_ts(now)
             tracing.TRACER.async_end("cluster", "migrate.drain",

@@ -1,0 +1,401 @@
+"""Vectorized control plane: equivalence properties and eviction guards.
+
+The array backend is only allowed to exist because it is *indistinguishable*
+from the object control plane at every contract point; this suite pins that
+as properties (hypothesis when installed, the deterministic ``tests/_hyp``
+fallback otherwise):
+
+  * the jitted array water-fill (both the exact sort-based ``ref`` impl and
+    the fixed-iteration bisection ``pallas`` kernel) matches the scalar
+    ``max_min_fair`` within 1e-6 x capacity on arbitrary demand vectors —
+    including ``inf`` (backlogged) demands, zero demands and zero weights —
+    never over-fills capacity, and hands satisfied tenants their demand
+    exactly;
+  * a ``StoreBucket`` (one row of the flat ``BucketStore``) is operation-
+    for-operation *bit-identical* to a ``TokenBucket`` over arbitrary
+    consume/drain/wait_time/set_rate sequences on the virtual clock,
+    including snapshot/restore round trips in both directions — so
+    migration TenantState payloads cross backends losslessly;
+  * ``TenantIndex`` keeps the tenant<->slot map dense and stable under
+    arbitrary add/drop/compact churn;
+  * a ``VectorizedControlPlane`` driven by the same counter trace as a real
+    TenantScheduler + RateController produces the same allocations;
+  * telemetry eviction: a departed tenant's EWMA/baseline state leaves the
+    telemetry maps (the PR 10 leak regression) — on explicit
+    ``evict_tenant`` and on the cluster's migration-finalize path.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.control.congestion import INF, WaterFill, max_min_fair
+from repro.control.controller import RateController
+from repro.control.telemetry import SchedulerTelemetry
+from repro.control.vectorized import (
+    BucketStore, TenantIndex, VectorizedControlPlane, check_backend,
+    waterfill_allocate,
+)
+from repro.core.engine import TokenBucket
+from repro.serve.scheduler import TenantScheduler
+
+from _hyp import given, settings, st
+
+CAP = 1000.0
+
+
+def test_check_backend():
+    assert check_backend("object") == "object"
+    assert check_backend("vectorized") == "vectorized"
+    with pytest.raises(ValueError):
+        check_backend("simd")
+
+
+# ---------------------------------------------------------------------------
+# water-fill equivalence
+# ---------------------------------------------------------------------------
+
+_DEMAND = st.tuples(
+    st.sampled_from(["zero", "small", "big", "inf"]),
+    st.floats(min_value=0.01, max_value=1.0),
+    st.sampled_from([0.0, 0.5, 1.0, 2.0, 4.0]),
+)
+
+
+def _build(entries):
+    demands, weights = {}, {}
+    for t, (kind, frac, w) in enumerate(entries):
+        demands[t] = {"zero": 0.0, "small": frac * CAP / len(entries),
+                      "big": frac * 2.0 * CAP, "inf": INF}[kind]
+        weights[t] = w
+    return demands, weights
+
+
+def _check_against_mmf(demands, weights, vec, exact):
+    mmf = max_min_fair(CAP, demands, weights)
+    assert set(vec) == set(mmf)
+    total = sum(vec.values())
+    assert total <= CAP * (1 + 1e-9) + 1e-6
+    # sums to capacity exactly when demand is sufficient
+    want = sum(min(d, CAP) if math.isfinite(d) else CAP
+               for t, d in demands.items() if weights[t] > 0)
+    if want >= CAP:
+        assert total == pytest.approx(CAP, abs=1e-6 * CAP)
+    for t in mmf:
+        assert vec[t] == pytest.approx(mmf[t], abs=1e-6 * CAP)
+        if exact and math.isfinite(demands[t]) and mmf[t] == demands[t]:
+            assert vec[t] == demands[t]      # satisfied => demand, exactly
+
+
+@settings(max_examples=25, deadline=None)
+@given(entries=st.lists(_DEMAND, min_size=1, max_size=12))
+def test_waterfill_ref_matches_max_min_fair(entries):
+    demands, weights = _build(entries)
+    vec = waterfill_allocate(demands, CAP, weights, impl="ref")
+    _check_against_mmf(demands, weights, vec, exact=True)
+
+
+@settings(max_examples=5, deadline=None)
+@given(entries=st.lists(_DEMAND, min_size=1, max_size=8))
+def test_waterfill_pallas_matches_max_min_fair(entries):
+    demands, weights = _build(entries)
+    vec = waterfill_allocate(demands, CAP, weights, impl="pallas")
+    _check_against_mmf(demands, weights, vec, exact=False)
+
+
+def test_waterfill_facade_dispatch():
+    """WaterFill(backend="vectorized").allocate == object backend."""
+    from repro.control.telemetry import TenantObs
+
+    obs = {0: TenantObs(rate=100.0, offered=100.0),
+           1: TenantObs(rate=50.0, offered=50.0, deferred=30.0),
+           2: TenantObs(rate=0.0, offered=0.0, queue=4.0)}
+    weights = {0: 1.0, 1: 2.0, 2: 1.0}
+    a_obj = WaterFill(weights, backend="object").allocate(obs, CAP)
+    a_vec = WaterFill(weights, backend="vectorized").allocate(obs, CAP)
+    assert set(a_obj) == set(a_vec)
+    for t in a_obj:
+        assert a_vec[t] == pytest.approx(a_obj[t], abs=1e-6 * CAP)
+
+
+# ---------------------------------------------------------------------------
+# bucket equivalence
+# ---------------------------------------------------------------------------
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["consume", "drain", "wait", "set_rate",
+                               "set_rate_burst", "snapshot_roundtrip"]),
+              st.floats(min_value=0.0, max_value=2.0),
+              st.floats(min_value=0.01, max_value=1.0)),
+    min_size=1, max_size=40)
+
+
+def _apply(bucket, ops, rate, cap):
+    """Drive one bucket through an op sequence; return observed outputs."""
+    out, now = [], 0.0
+    for op, x, dt in ops:
+        now += dt
+        if op == "consume":
+            out.append(bucket.consume(x * cap, now=now))
+        elif op == "drain":
+            out.append(bucket.drain(x * cap, now=now))
+        elif op == "wait":
+            out.append(bucket.wait_time(x * cap, now=now))
+        elif op == "set_rate":
+            bucket.set_rate(rate * (0.5 + x), burst=None, now=now)
+        elif op == "set_rate_burst":
+            bucket.set_rate(rate * (0.5 + x), burst=cap * (0.5 + x), now=now)
+        else:
+            snap = bucket.snapshot(now=now)
+            out.append(tuple(sorted(snap.items())))
+        out.append((bucket.rate, bucket.capacity, bucket.tokens,
+                    bucket.updated))
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(rate=st.floats(min_value=0.5, max_value=500.0),
+       cap=st.floats(min_value=1.0, max_value=1000.0), ops=_OPS)
+def test_store_bucket_bit_identical_to_token_bucket(rate, cap, ops):
+    ref = TokenBucket(rate, cap)
+    store = BucketStore()
+    vec = store.add(7, rate, cap)
+    assert _apply(ref, ops, rate, cap) == _apply(vec, ops, rate, cap)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.floats(min_value=0.5, max_value=500.0),
+       cap=st.floats(min_value=1.0, max_value=1000.0), ops=_OPS,
+       t0=st.floats(min_value=0.0, max_value=50.0))
+def test_bucket_snapshots_cross_backends(rate, cap, ops, t0):
+    """snapshot() from either backend restores into the other exactly."""
+    ref = TokenBucket(rate, cap)
+    store = BucketStore()
+    vec = store.add(1, rate, cap)
+    _apply(ref, ops, rate, cap)
+    _apply(vec, ops, rate, cap)
+    assert ref.snapshot(now=t0 + 100.0) == vec.snapshot(now=t0 + 100.0)
+    # object -> array
+    s2 = BucketStore()
+    back = s2.restore(2, ref.snapshot(now=t0 + 100.0), now=t0 + 100.0)
+    # array -> object
+    forth = TokenBucket.restore(vec.snapshot(now=t0 + 100.0),
+                                now=t0 + 100.0)
+    for dt in (0.0, 3.7):
+        want = ref.wait_time(cap, now=t0 + 100.0 + dt)
+        assert back.wait_time(cap, now=t0 + 100.0 + dt) == want
+        assert forth.wait_time(cap, now=t0 + 100.0 + dt) == want
+
+
+# ---------------------------------------------------------------------------
+# tenant index
+# ---------------------------------------------------------------------------
+
+_CHURN = st.lists(st.tuples(st.sampled_from(["add", "drop", "compact"]),
+                            st.integers(min_value=0, max_value=30)),
+                  min_size=1, max_size=60)
+
+
+@settings(max_examples=30, deadline=None)
+@given(churn=_CHURN)
+def test_tenant_index_dense_and_stable(churn):
+    idx = TenantIndex()
+    shadow = {}                       # tenant -> the slot we last saw
+    for op, t in churn:
+        if op == "add":
+            slot = idx.add(t)
+            shadow[t] = slot
+        elif op == "drop" and t in shadow:
+            idx.drop(t)
+            del shadow[t]
+        elif op == "compact":
+            remap = idx.compact()
+            for tenant in shadow:
+                s = shadow[tenant]
+                shadow[tenant] = remap.get(s, s)
+        # invariants after every operation
+        assert len(idx) == len(shadow)
+        assert idx.size >= len(idx)
+        for tenant, slot in shadow.items():
+            assert idx.slot(tenant) == slot
+            assert idx.tenant_at(slot) == tenant
+    remap = idx.compact()
+    assert idx.size == len(idx)       # compact => dense
+    seen = sorted(s for _, s in idx.items())
+    assert seen == list(range(len(idx)))
+
+
+def test_tenant_index_add_is_idempotent_and_reuses_slots():
+    idx = TenantIndex()
+    a = idx.add(10)
+    assert idx.add(10) == a
+    b = idx.add(11)
+    idx.drop(10)
+    assert idx.add(12) == a           # freed slot reused, size stays put
+    assert idx.size == 2 and b == 1 - a or idx.size == 2
+
+
+# ---------------------------------------------------------------------------
+# fused tick vs the object pipeline
+# ---------------------------------------------------------------------------
+
+def _drive_both(n=40, ticks=4, seed=3):
+    rng = np.random.default_rng(seed)
+    weights = rng.choice([1.0, 2.0, 4.0], size=n)
+    steps = np.maximum(np.round(rng.uniform(0.2, 2.0, size=n)
+                                * (CAP / n)), 1.0)
+    backlogged = rng.random(n) < 0.25
+
+    sched = TenantScheduler(policy="wfq", charge_prompt=True)
+    ctrl = RateController(CAP, weights={t: float(weights[t])
+                                        for t in range(n)}, alpha=0.5)
+    ctrl.attach_scheduler(sched)
+    plane = VectorizedControlPlane(CAP, alpha=0.5, headroom=1.25)
+    for t in range(n):
+        sched.add_tenant(t, weight=float(weights[t]))
+        plane.add_tenant(t, weight=float(weights[t]))
+        if backlogged[t]:
+            sched.queues[t].append(None)        # pending() counts length
+    queue = np.where(backlogged, 1.0, 0.0)
+    served = np.zeros(n)
+    now = 0.0
+    for _ in range(ticks):
+        served += steps
+        for t in range(n):
+            sched.served_tokens[t] = int(served[t])
+        ctrl.tick(now)
+        plane.tick(served, queue=queue, now=now)
+        now += 1.0
+    trace = {"served": served, "steps": steps, "queue": queue, "now": now}
+    return ctrl, plane, trace
+
+
+@pytest.mark.slow
+def test_vectorized_plane_matches_object_controller():
+    ctrl, plane, _ = _drive_both()
+    vec = plane.allocations()
+    assert set(ctrl.allocations) == set(vec)
+    for t, r in ctrl.allocations.items():
+        assert vec[t] == pytest.approx(r, abs=1e-6 * CAP)
+    # counters export the tick cost series nk_top renders
+    c = plane.counters()
+    assert c["nk_control_ticks_total"] >= 4
+    assert c["nk_control_tick_seconds_total"] > 0
+    assert c["nk_control_tenants"] == 40
+
+
+@pytest.mark.slow
+def test_plane_tenantstate_roundtrip_mid_flight():
+    """export_tenant at an arbitrary tick point restores losslessly."""
+    _, plane, trace = _drive_both(n=12, ticks=3)
+    before = plane.allocations()
+    snap = plane.export_tenant(5)
+    assert 5 not in plane.index
+    # restore at the export instant: the bucket re-anchors to ``now``, so
+    # same-time restore must reproduce the snapshot bit-for-bit
+    plane.restore_tenant(5, snap, now=snap["bucket"]["updated"])
+    again = plane.snapshot_tenant(5)
+    assert again["weight"] == snap["weight"]
+    assert again["bucket"] == pytest.approx(snap["bucket"])
+    assert again["ewma_offered"] == pytest.approx(snap["ewma_offered"])
+    # the allocation itself re-forms on the next tick (a drop clears it,
+    # exactly like the object controller re-pushing after a migration)
+    served = trace["served"] + trace["steps"]
+    plane.tick(served, queue=trace["queue"], now=trace["now"])
+    assert plane.allocations()[5] == pytest.approx(before[5],
+                                                   rel=0.35, abs=1.0)
+
+
+def test_scheduler_bucket_backend_migration_roundtrip():
+    """TenantState crosses object<->vectorized schedulers unchanged."""
+    now = 1.0
+    src = TenantScheduler(bucket_backend="vectorized")
+    dst = TenantScheduler(bucket_backend="object")
+    src.add_tenant(1, weight=2.0, rate_tokens_per_s=100.0, burst=50.0)
+    src.buckets[1].consume(20.0, now=now)
+    state = src.export_tenant(1, now=now)
+    dst.import_tenant(1, state, now=now)
+    assert dst.buckets[1].snapshot(now=now) == \
+        pytest.approx({"rate": 100.0, "capacity": 50.0, "tokens": 30.0,
+                       "updated": now})
+    # and back again, via the checkpoint (full-state) path
+    back = TenantScheduler(bucket_backend="vectorized")
+    back.restore_tenant(1, dst.snapshot_tenant(1, now=now), now=now)
+    assert back.buckets[1].snapshot(now=now) == \
+        dst.buckets[1].snapshot(now=now)
+
+
+# ---------------------------------------------------------------------------
+# telemetry eviction (the leak regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["object", "vectorized"])
+def test_scheduler_telemetry_eviction(backend):
+    sched = TenantScheduler()
+    tel = SchedulerTelemetry(sched, alpha=0.5, backend=backend)
+    for t in (1, 2):
+        sched.add_tenant(t)
+        sched.served_tokens[t] = 10
+    tel.update(now=0.0)
+    sched.served_tokens[1] = 30
+    sched.served_tokens[2] = 40
+    tel.update(now=1.0)
+    assert tel.tracked_tenants() >= {1, 2}
+    sched.drop_tenant(1)
+    tel.evict_tenant(1)
+    assert 1 not in tel.tracked_tenants()
+    assert 2 in tel.tracked_tenants()
+    # the survivor's EWMA is untouched by the eviction
+    obs = tel.update(now=2.0)
+    assert 1 not in obs and 2 in obs
+
+
+@pytest.mark.parametrize("backend", ["object", "vectorized"])
+def test_controller_evict_tenant(backend):
+    sched = TenantScheduler()
+    ctrl = RateController(CAP, alpha=0.5, backend=backend)
+    ctrl.attach_scheduler(sched)
+    for t in (1, 2):
+        sched.add_tenant(t)
+        sched.served_tokens[t] = 5
+    ctrl.tick(0.0)
+    sched.served_tokens[1] = 25
+    sched.served_tokens[2] = 25
+    ctrl.tick(1.0)
+    assert 1 in ctrl.allocations
+    sched.drop_tenant(1)
+    ctrl.evict_tenant(1)
+    tel = ctrl._schedulers[0][1]
+    assert 1 not in tel.tracked_tenants()
+    assert 1 not in ctrl.allocations
+    # a tenant the scheduler still holds is NOT evicted (migration source
+    # that only moved one plane keeps live telemetry)
+    ctrl.evict_tenant(2)
+    assert 2 in tel.tracked_tenants()
+
+
+def test_migration_finalize_evicts_source_telemetry():
+    from repro.serve.scheduler import Request
+    from test_placement import make_fake_cluster
+
+    cluster = make_fake_cluster(2, controller=RateController(
+        512.0, alpha=0.6))
+    for t in range(2):
+        cluster.add_tenant(t)
+        for r in range(3):
+            cluster.submit(Request(t, [1, 2], 4, req_id=10 * t + r,
+                                   arrival=0.0))
+    for i in range(8):
+        cluster.step(now=0.1 * (i + 1))
+    src = cluster.placement[0]
+    tel_by_sched = {id(s): tel
+                    for s, tel in cluster.controller._schedulers}
+    src_tel = tel_by_sched[id(cluster.engines[src].scheduler)]
+    assert 0 in src_tel.tracked_tenants()
+    cluster.migrate(0, 1 - src, now=1.0)
+    for i in range(12):
+        cluster.step(now=1.0 + 0.1 * (i + 1))
+    assert cluster.placement[0] == 1 - src
+    assert 0 not in src_tel.tracked_tenants()      # the leak, plugged
+    dst_tel = tel_by_sched[id(cluster.engines[1 - src].scheduler)]
+    assert 0 in dst_tel.tracked_tenants()

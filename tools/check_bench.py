@@ -1,7 +1,15 @@
 #!/usr/bin/env python3
-"""Gate a bench_fairness --json result against committed thresholds.
+"""Gate bench --json results against committed thresholds.
 
-    python tools/check_bench.py RESULTS.json benchmarks/bench_thresholds.json
+    python tools/check_bench.py RESULTS.json [MORE.json ...] \\
+        benchmarks/bench_thresholds.json
+
+The LAST argument is the thresholds file; every earlier argument is a
+results document (bench_fairness, bench_control_scale, ...). Several
+results files are merged — metric maps unioned (a duplicate metric name
+across files is an error: two benches must not claim the same row), and
+the overall ``ok`` flag is the AND across files — so one shared
+thresholds file gates the whole suite.
 
 Thresholds map metric names (the bench's "section,metric" row names) to
 {"min": x} / {"max": x} bounds (inclusive). A metric missing from the
@@ -14,6 +22,19 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
+
+
+def merge_results(docs: list) -> dict:
+    """Union several bench --json docs into one checkable document."""
+    merged = {"ok": True, "metrics": {}}
+    for doc in docs:
+        merged["ok"] = merged["ok"] and bool(doc.get("ok", False))
+        for name, v in doc.get("metrics", {}).items():
+            if name in merged["metrics"]:
+                raise ValueError(f"metric {name!r} appears in more than "
+                                 f"one results file")
+            merged["metrics"][name] = v
+    return merged
 
 
 def check(results: dict, thresholds: dict) -> list:
@@ -36,11 +57,16 @@ def check(results: dict, thresholds: dict) -> list:
 
 
 def main(argv) -> int:
-    if len(argv) != 2:
+    if len(argv) < 2:
         print(__doc__.strip())
         return 2
-    results = json.loads(pathlib.Path(argv[0]).read_text())
-    thresholds = json.loads(pathlib.Path(argv[1]).read_text())
+    docs = [json.loads(pathlib.Path(p).read_text()) for p in argv[:-1]]
+    thresholds = json.loads(pathlib.Path(argv[-1]).read_text())
+    try:
+        results = merge_results(docs)
+    except ValueError as e:
+        print(f"bad results set: {e}")
+        return 2
     problems = check(results, thresholds)
     if problems:
         print("bench regression vs committed thresholds:")

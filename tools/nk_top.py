@@ -145,6 +145,19 @@ def render(scrape: Scrape) -> str:
     if saved is not None:
         head.append(f"cores saved {saved:.2f}")
     lines.append("  |  ".join(head))
+
+    # control-plane tick cost, straight from the counters: mean µs per
+    # controller tick and the tenant population the last tick covered
+    ticks = s.value("nk_control_ticks_total")
+    secs = s.value("nk_control_tick_seconds_total")
+    tenants_per_tick = s.value("nk_control_tenants")
+    if ticks:
+        ctrl = [f"control {_fmt(ticks)} ticks"]
+        if secs is not None:
+            ctrl.append(f"{secs / ticks * 1e6:.0f}us/tick")
+        if tenants_per_tick is not None:
+            ctrl.append(f"{_fmt(tenants_per_tick)} tenants/tick")
+        lines.append("  |  ".join(ctrl))
     lines.append("")
 
     loads = s.by_label("nk_engine_load", "engine")
